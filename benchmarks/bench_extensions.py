@@ -1,0 +1,79 @@
+"""Beyond-Table-I DSE dimensions the paper names but does not quantify:
+
+  * memory blocks per layer (port contention vs BRAM/mapping-logic area) —
+    paper Sec. IV "reduce the memory blocks";
+  * synapse weight precision (BRAM footprint vs fixed-point accuracy) —
+    paper Sec. III "weight quantization size ... significantly affects the
+    system's memory requirements";
+  * input spike-coding scheme (rate vs TTFS vs burst) — paper Sec. II-A
+    lists the schemes; Sec. VI-B attributes a rival's accuracy edge to
+    "optimized spike encoding schemes".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import dse, encoding, snn, train_snn, validate
+from repro.core.accelerator import arch as hw_arch
+from repro.core.accelerator import paper_nets
+from repro.data import synthetic
+
+
+def run(quick: bool = False):
+    # ---- memory-block contention sweep (net-1, published traffic) ----
+    cfg = paper_nets.build("net-1", lhr=(2, 2, 2))
+    counts = paper_nets.paper_counts("net-1", cfg)
+    for cand in dse.sweep_memory_blocks(cfg, counts):
+        emit(f"ext/mem_blocks/net-1/{'x'.join(map(str, cand.blocks))}", 0.0,
+             f"cycles={cand.cycles:.0f} lut={cand.lut/1e3:.1f}K "
+             f"bram={cand.bram}")
+
+    # ---- weight-precision sweep: BRAM + fixed-point accuracy ----
+    data = synthetic.make_images(seed=9, n_train=512, n_test=128, noise=0.4)
+    net_cfg = snn.SNNConfig(
+        name="wq", input_shape=(28, 28),
+        layers=(snn.Dense(64), snn.Dense(10 * 4)),
+        num_classes=10, pcr=4, num_steps=10)
+    res = train_snn.train(net_cfg, data, steps=60 if quick else 120,
+                          batch_size=64)
+    hw = hw_arch.from_snn_config(net_cfg)
+    brams = dse.sweep_weight_bits(hw)
+    weights = [np.asarray(p["w"]) for p in res.params]
+    biases = [np.asarray(p["b"]) for p in res.params]
+    x = jnp.asarray(data.x_test[:96])
+    y = data.y_test[:96]
+    spikes_in = np.asarray(encoding.rate_encode(jax.random.key(0), x, 10)
+                           ).reshape(10, len(y), -1).astype(np.int64)
+    for bits in (4, 6, 8, 12):
+        fp = validate.quantize(weights, biases, beta=0.95, threshold=1.0,
+                               frac_bits=bits - 1)
+        out = validate.reference_apply_batch(fp, spikes_in)
+        pred = np.asarray(encoding.population_decode(
+            jnp.asarray(out.astype(np.float32)), 10))
+        acc = float((pred == y).mean())
+        emit(f"ext/weight_bits/{bits}", 0.0,
+             f"acc={acc:.3f} (float={res.test_accuracy:.3f}) "
+             f"bram={brams.get(bits, '-')}")
+
+    # ---- encoding-scheme ablation at fixed T ----
+    T = 10
+    for name, make in (
+            ("rate", lambda xx: encoding.rate_encode(jax.random.key(1), xx, T)),
+            ("ttfs", lambda xx: encoding.ttfs_encode(xx, T)),
+            ("burst", lambda xx: encoding.burst_encode(jax.random.key(1),
+                                                       xx, T))):
+        spikes = make(x)
+        out = snn.apply(net_cfg, res.params, spikes)
+        pred = np.asarray(encoding.population_decode(out, 10))
+        acc = float((pred == y).mean())
+        density = float(spikes.mean())
+        emit(f"ext/encoding/{name}", 0.0,
+             f"acc={acc:.3f} spike_density={density:.3f} "
+             f"(model trained with rate)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Paper Fig. 1 reproduction: layer-wise firing-neuron ratio for a
+784-600-600-600 style model (reduced widths on CPU), trained on the
+synthetic MNIST/FMNIST stand-ins.  The claim under test: firing density
+DECLINES with depth (static:firing ratio grows), the motivation for
+layer-wise LHR."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.core import encoding, snn, sparsity, train_snn
+from repro.data import synthetic
+
+
+def run(quick: bool = False):
+    widths = 128 if quick else 256
+    steps = 80 if quick else 200
+    for name, seed in (("synth-mnist", 0), ("synth-fmnist", 17)):
+        data = synthetic.make_images(name=name, seed=seed,
+                                     n_train=1024, n_test=256,
+                                     noise=0.15 if seed == 0 else 0.25)
+        cfg = snn.SNNConfig(
+            name=name, input_shape=(28, 28),
+            layers=(snn.Dense(widths), snn.Dense(widths), snn.Dense(widths),
+                    snn.Dense(10 * 10)),
+            num_classes=10, pcr=10, num_steps=15)
+        res = train_snn.train(cfg, data, steps=steps, batch_size=64)
+        key = jax.random.key(5)
+        x = jnp.asarray(data.x_test[:64])
+        spikes_in = encoding.rate_encode(key, x, cfg.num_steps)
+        (stats, us) = timed(lambda: sparsity.analyze(cfg, res.params,
+                                                     spikes_in), repeats=1)
+        ratios = [s.firing_ratio for s in stats]
+        for s in stats:
+            emit(f"fig1/{name}/layer{s.layer}", us,
+                 f"firing_ratio={s.firing_ratio:.4f} "
+                 f"static:firing={s.static_to_firing:.1f}")
+        hidden = ratios[1:]                # exclude encoded input layer
+        monotone = all(hidden[i] >= hidden[i + 1] - 0.02
+                       for i in range(len(hidden) - 1))
+        emit(f"fig1/{name}/deeper_is_sparser", 0.0,
+             f"{monotone} acc={res.test_accuracy:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Paper Fig. 6 reproduction: the latency-LUT trade-off cloud per network —
+a full LHR design-space sweep with Pareto frontier extraction, plus the
+DSE engine's throughput (configs evaluated per second: the paper's "rapid
+exploration" claim)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core import dse
+from repro.core.accelerator import paper_data, paper_nets
+
+
+def run(quick: bool = False):
+    nets = ["net-1", "net-3"] if quick else ["net-1", "net-2", "net-3",
+                                             "net-4", "net-5"]
+    for net in nets:
+        cfg = paper_nets.build(net)
+        counts = paper_nets.paper_counts(net, cfg)
+        t0 = time.perf_counter()
+        result = dse.sweep(cfg, counts, max_lhr=64 if quick else 256)
+        dt = time.perf_counter() - t0
+        n = len(result.candidates)
+        frontier = result.frontier
+        emit(f"fig6/{net}/sweep", dt / n * 1e6,
+             f"candidates={n} pareto={len(frontier)} "
+             f"throughput={n/dt:.0f}cfg/s")
+        # frontier extremes + knee
+        fr = sorted(frontier, key=lambda c: c.cycles)
+        for tag, c in (("fastest", fr[0]), ("smallest", fr[-1]),
+                       ("min_energy", result.min_energy())):
+            emit(f"fig6/{net}/{tag}", 0.0,
+                 f"lhr={'x'.join(map(str, c.lhr))} cycles={c.cycles:.0f} "
+                 f"lut={c.lut/1e3:.1f}K E={c.energy_mj:.2f}mJ")
+        # irregularity the paper highlights: frontier points where fewer
+        # LUTs do NOT cost latency (layer-wise allocation effect)
+        wins = sum(1 for a, b in zip(fr, fr[1:])
+                   if b.lut < a.lut and b.cycles <= a.cycles * 1.02)
+        emit(f"fig6/{net}/free_area_savings", 0.0, f"{wins} frontier steps")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Kernel-level benchmarks: block-skip rates of the sparsity-aware spike
+GEMM on real trained-SNN traffic (the TPU-granular analogue of the paper's
+PENC savings), and fused-LIF correctness/shape sweep timings in interpret
+mode.  Wall-clock here is CPU-interpret (no TPU) — the figure of merit is
+the SKIP FRACTION, which is hardware-independent."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import encoding, snn, train_snn
+from repro.data import synthetic
+from repro.kernels import ops, ref
+
+
+def run(quick: bool = False):
+    # trained-model traffic
+    data = synthetic.make_images(seed=0, n_train=512, n_test=128)
+    cfg = snn.SNNConfig(name="k", input_shape=(28, 28),
+                        layers=(snn.Dense(256), snn.Dense(256),
+                                snn.Dense(10 * 5)),
+                        num_classes=10, pcr=5, num_steps=15)
+    res = train_snn.train(cfg, data, steps=60 if quick else 150,
+                          batch_size=64)
+    x = jnp.asarray(data.x_test[:32])
+    spikes_in = encoding.rate_encode(jax.random.key(0), x, cfg.num_steps)
+    all_spikes = snn.apply(cfg, res.params, spikes_in,
+                           return_all_layers=True)
+    layer_w = [res.params[0]["w"], res.params[1]["w"], res.params[2]["w"]]
+    trains = [spikes_in.reshape(-1, 784)] + [
+        s.reshape(-1, s.shape[-1]) for s in all_spikes[:-1]]
+    for l, (train, w) in enumerate(zip(trains, layer_w)):
+        density = float(train.mean())
+        base = ops.skip_fraction(train, block_m=8, block_k=128)
+        perm = ops.firing_rate_permutation(train.mean(axis=0))
+        sp, wp = ops.apply_permutation(train, w, perm)
+        perm_skip = ops.skip_fraction(sp, block_m=8, block_k=128)
+        out, us = timed(lambda: ops.spike_gemm(
+            sp[:64], wp, block_m=8).block_until_ready(), repeats=1)
+        want = ref.spike_gemm_ref(sp[:64], wp)
+        ok = bool(jnp.allclose(out, want, atol=1e-3))
+        emit(f"kernels/spike_gemm/layer{l}", us,
+             f"density={density:.3f} skip={base:.2f} "
+             f"skip_profiled={perm_skip:.2f} allclose={ok}")
+
+    # fused LIF shape sweep
+    for shape in [(8, 512), (64, 4096)]:
+        u = jnp.zeros(shape)
+        s = jnp.zeros(shape)
+        c = jnp.ones(shape) * 0.5
+        (out, us) = timed(lambda: ops.lif_step(
+            u, s, c, beta=0.9, threshold=1.0)[0].block_until_ready(),
+            repeats=1)
+        emit(f"kernels/lif_step/{shape[0]}x{shape[1]}", us, "interpret-mode")
+
+
+if __name__ == "__main__":
+    run()

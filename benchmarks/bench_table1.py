@@ -1,0 +1,68 @@
+"""Paper Table I reproduction: latency (cycles), FPGA resources (LUT/REG) and
+energy for every TW row of the five networks, driven by the paper's own
+published per-layer spike statistics.  Emits per-row prediction vs paper
+value + relative error; summary lines give median errors (the reproduction
+fidelity reported in EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core.accelerator import cycle_model, paper_data, paper_nets, resources
+
+
+def run(quick: bool = False):
+    lat_errs, lut_errs, reg_errs, e_errs = [], [], [], []
+    for net in paper_data.NETS:
+        cfg0 = paper_nets.build(net)
+        counts = paper_nets.paper_counts(net, cfg0)
+        for row in paper_data.tw_rows(net):
+            cfg = cfg0.with_lhr(row.lhr)
+            (cycles, us) = timed(
+                lambda c=cfg: float(cycle_model.latency_cycles(c, counts)))
+            res = resources.estimate(cfg)
+            energy = resources.energy_mj(cfg, counts, cycles)
+            lat_err = cycles / row.cycles - 1
+            lat_errs.append(abs(lat_err))
+            derived = (f"cycles={cycles:.0f}/paper={row.cycles:.0f}"
+                       f"({lat_err:+.0%})")
+            if row.lut is not None:
+                lut_err = res.lut / (row.lut * 1e3) - 1
+                lut_errs.append(abs(lut_err))
+                reg_errs.append(abs(res.reg / (row.reg * 1e3) - 1))
+                derived += f" lut={res.lut/1e3:.1f}K({lut_err:+.0%})"
+            if row.energy_mj is not None:
+                e_err = energy / row.energy_mj - 1
+                e_errs.append(abs(e_err))
+                derived += f" E={energy:.2f}mJ({e_err:+.0%})"
+            lhr_s = "x".join(map(str, row.lhr))
+            emit(f"table1/{net}/lhr-{lhr_s}", us, derived)
+    emit("table1/median_latency_err", 0.0, f"{np.median(lat_errs):.1%}")
+    emit("table1/median_lut_err", 0.0, f"{np.median(lut_errs):.1%}")
+    emit("table1/median_reg_err", 0.0, f"{np.median(reg_errs):.1%}")
+    emit("table1/median_energy_err", 0.0, f"{np.median(e_errs):.1%}")
+
+    # headline claims
+    base = resources.estimate(paper_nets.build("net-1", lhr=(1, 1, 1)))
+    opt = resources.estimate(paper_nets.build("net-1", lhr=(4, 8, 8)))
+    emit("table1/claim_net1_resource_saving", 0.0,
+         f"{1 - opt.lut/base.lut:.0%} (paper: 76%)")
+
+    # Paper text: "31.25x speed up, 27% fewer resources" for net-4 vs [34].
+    # The paper's own (32,16,8,16,64) table row is 843,518 cycles = only
+    # 1.85x — the text's 31.25x matches the FASTEST config's latency column
+    # (x0.03 ratio).  We report both readings.
+    cfg0 = paper_nets.build("net-4")
+    counts = paper_nets.paper_counts("net-4", cfg0)
+    prior = paper_data.baseline_row("net-4").cycles
+    fastest = float(cycle_model.latency_cycles(
+        cfg0.with_lhr((1, 1, 1, 1, 1)), counts))
+    row32 = float(cycle_model.latency_cycles(
+        cfg0.with_lhr((32, 16, 8, 16, 64)), counts))
+    emit("table1/claim_net4_speedup_vs_prior", 0.0,
+         f"fastest-config={prior/fastest:.1f}x (paper text: 31.25x); "
+         f"lhr-32x16x8x16x64={prior/row32:.1f}x (paper row: 1.85x)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,19 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def timed(fn: Callable, *args, repeats: int = 3, **kw):
+    """Returns (result, microseconds per call)."""
+    fn(*args, **kw)                      # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        result = fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return result, us
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

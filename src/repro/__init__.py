@@ -1,0 +1,16 @@
+"""repro: sparsity-aware SNN accelerator DSE (Aliyev et al. 2023) rebuilt as
+a production multi-pod JAX framework.
+
+Subpackages:
+  core         the paper's contribution: SNN substrate + cycle-accurate
+               accelerator model + DSE engine + spike-to-spike validation
+  kernels      Pallas TPU kernels (fused LIF, block-skip spike GEMM)
+  models       10-architecture LM zoo (dense/MoE/SSM/hybrid/enc-dec/VLM)
+  configs      assigned architecture configs + shape grid
+  distributed  sharding rules, fault tolerance, compression, pipeline-parallel
+  train/serve  step builders, serving engine
+  checkpoint   sharded elastic checkpoints
+  launch       mesh, dry-run, train/serve CLIs
+  roofline     loop-corrected HLO analysis + roofline reporting
+"""
+__version__ = "1.0.0"

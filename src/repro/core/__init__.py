@@ -1,0 +1,12 @@
+# The paper's primary contribution: sparsity-aware SNN accelerator design +
+# cycle-accurate DSE.  Submodules:
+#   lif, encoding, snn       — spiking model substrate (training side)
+#   sparsity                 — layer-wise firing analysis (paper Fig. 1)
+#   accelerator              — the cycle-accurate hardware model (paper Sec. V)
+#   dse                      — design space exploration engine (paper Sec. IV)
+#   validate                 — spike-to-spike hardware validation
+from repro.core.lif import LIFParams, lif_step, spike_fn
+from repro.core.snn import SNNConfig, Dense, Conv, MaxPool
+
+__all__ = ["LIFParams", "lif_step", "spike_fn", "SNNConfig", "Dense", "Conv",
+           "MaxPool"]

@@ -1,0 +1,147 @@
+"""Cycle-accurate latency model (the paper's TLM simulator, Sec. V).
+
+Driven by per-layer per-time-step spike counts — either the trace of a
+trained model (``repro.core.snn.spike_counts_per_layer``) or the paper's
+published averages — and an ``AcceleratorConfig``.
+
+Per layer and time step the engine passes through the ECU state machine's
+three phases (paper Fig. 4):
+
+  PENC compress:  cycles = spikes + ceil(fan_in / penc_width)
+                  (one address emitted per cycle + one cycle to scan each
+                  chunk, empty chunks skipped in a single cycle)
+  Accumulate:     fc:   spikes * lhr * acc_cpo * contention
+                  conv: spikes * k^2 * lhr * acc_cpo * contention
+                  (each NU serially walks its logical neurons per spike
+                  address; a BRAM read-modify-write costs ``acc_cpo`` cycles;
+                  NUs sharing a memory block serialize)
+  Activate:       fc:   lhr * act_cycles                  (all owned neurons)
+                  conv: min(spikes * k^2, out_positions) * lhr * act_cycles
+                  (event-driven activation over affected addresses with lazy
+                  leak — see TimingModel.conv_event_driven_act)
+
+Layer-wise pipelining (paper Sec. V-B: "the ECU loads the spike train into a
+buffer and moves on") is the exact dataflow recurrence
+
+    finish[l][t] = max(finish[l-1][t], finish[l][t-1]) + lat[l][t]
+
+whose final entry is the per-inference latency.  Everything is vectorised
+over arbitrary trailing axes, so a full DSE sweep (thousands of LHR vectors)
+or a batch of sample traces evaluates in one shot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.accelerator.arch import AcceleratorConfig, LayerHW
+
+
+def layer_latency(layer: LayerHW, spikes: np.ndarray, t: "TimingModel",
+                  lhr: np.ndarray | int | None = None) -> np.ndarray:
+    """Latency (cycles) of one layer engine for one time step.
+
+    ``spikes``: incoming spike count(s) — any shape, broadcastable.
+    ``lhr``: override for vectorised DSE sweeps (defaults to layer.lhr).
+    """
+    lhr = layer.lhr if lhr is None else lhr
+    spikes = np.asarray(spikes, dtype=np.float64)
+    penc = spikes + layer.penc_chunks
+    if layer.kind == "fc":
+        acc = spikes * lhr * t.acc_cycles_per_op * layer.contention
+        act = lhr * np.float64(t.act_cycles)
+    else:
+        fan_out = layer.kernel * layer.kernel
+        acc = spikes * fan_out * lhr * t.acc_cycles_per_op * layer.contention
+        if t.conv_event_driven_act:
+            affected = np.minimum(spikes * fan_out, layer.out_positions)
+        else:
+            affected = np.float64(layer.out_positions)
+        act = affected * lhr * t.act_cycles
+    return penc + acc + act + t.sync_cycles
+
+
+def pipeline_latency(lat: np.ndarray) -> np.ndarray:
+    """Exact layer-pipeline recurrence.
+
+    ``lat``: (L, T, ...) per-layer per-step latencies.
+    Returns finish time of the last layer's last step, shape ``lat.shape[2:]``.
+    """
+    L, T = lat.shape[:2]
+    finish_prev_layer = np.zeros(lat.shape[1:], dtype=np.float64)  # (T, ...)
+    for l in range(L):
+        finish = np.empty_like(finish_prev_layer)
+        busy = np.zeros(lat.shape[2:], dtype=np.float64)
+        for t in range(T):
+            start = np.maximum(finish_prev_layer[t], busy)
+            busy = start + lat[l, t]
+            finish[t] = busy
+        finish_prev_layer = finish
+    return finish_prev_layer[T - 1]
+
+
+def latency_cycles(cfg: AcceleratorConfig, counts: Sequence[np.ndarray],
+                   lhr_matrix: np.ndarray | None = None) -> np.ndarray:
+    """Per-inference latency.
+
+    ``counts``: per-layer incoming spike counts, each (T,) or (T, ...) —
+    entry ``l`` is the traffic entering layer ``l``.
+    ``lhr_matrix``: optional (C, L) int array — evaluates C candidate LHR
+    vectors at once (vectorised DSE); result shape (..., C) or (C,).
+    """
+    L = len(cfg.layers)
+    assert len(counts) == L, (len(counts), L)
+    T = np.asarray(counts[0]).shape[0]
+    lat = []
+    for l, layer in enumerate(cfg.layers):
+        c = np.asarray(counts[l], dtype=np.float64)
+        if lhr_matrix is not None:
+            c = c.reshape(c.shape + (1,) * 1)           # (T, ..., 1)
+            lhr = np.asarray(lhr_matrix[:, l])           # (C,)
+            lat.append(layer_latency(layer, c, cfg.timing, lhr=lhr))
+        else:
+            lat.append(layer_latency(layer, c, cfg.timing))
+    lat = np.stack(lat, axis=0)                          # (L, T, ...)
+    return pipeline_latency(lat)
+
+
+def latency_seconds(cfg: AcceleratorConfig, counts) -> np.ndarray:
+    return latency_cycles(cfg, counts) / (cfg.timing.clock_mhz * 1e6)
+
+
+def counts_from_averages(cfg: AcceleratorConfig, avg_spikes: Sequence[float],
+                         num_steps: int | None = None,
+                         pool_before: Sequence[bool] | None = None) -> list[np.ndarray]:
+    """Constant per-step traffic from published averages (paper Table-I
+    caption) — used for calibration and the Table-I reproduction benchmark.
+
+    ``pool_before[l]``: True if an OR-pool sits in front of layer ``l``
+    (its traffic is scaled by ``timing.pool_retention``).
+    """
+    T = num_steps or cfg.num_steps
+    out = []
+    for l, s in enumerate(avg_spikes):
+        scale = (cfg.timing.pool_retention
+                 if pool_before and pool_before[l] else 1.0)
+        out.append(np.full((T,), float(s) * scale))
+    return out
+
+
+@dataclasses.dataclass
+class LatencyBreakdown:
+    per_layer_per_step: np.ndarray     # (L, T)
+    bottleneck_layer: int
+    total_cycles: float
+
+
+def breakdown(cfg: AcceleratorConfig, counts: Sequence[np.ndarray]) -> LatencyBreakdown:
+    lat = np.stack([layer_latency(layer, np.asarray(c, np.float64), cfg.timing)
+                    for layer, c in zip(cfg.layers, counts)])
+    total = pipeline_latency(lat)
+    return LatencyBreakdown(
+        per_layer_per_step=lat,
+        bottleneck_layer=int(np.argmax(lat.sum(axis=1))),
+        total_cycles=float(total),
+    )

@@ -1,0 +1,160 @@
+"""Design Space Exploration engine (paper Sec. IV).
+
+Enumerates per-layer LHR vectors (powers of two, the paper's sweep style),
+evaluates latency via the cycle-accurate model and area via the component
+library *vectorised over all candidates at once*, and extracts the Pareto
+frontier over (LUT, cycles).  ``auto_select`` reproduces the paper's
+"best mapping" picks: the smallest design within a latency budget, or the
+fastest within an area budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.accelerator.arch import AcceleratorConfig
+from repro.core.accelerator import cycle_model, resources
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    lhr: tuple[int, ...]
+    cycles: float
+    lut: float
+    energy_mj: float
+    pareto: bool = False
+
+
+@dataclasses.dataclass
+class DSEResult:
+    config: AcceleratorConfig
+    candidates: list[Candidate]
+
+    @property
+    def frontier(self) -> list[Candidate]:
+        return [c for c in self.candidates if c.pareto]
+
+    def best_within_latency(self, max_cycles: float) -> Optional[Candidate]:
+        ok = [c for c in self.candidates if c.cycles <= max_cycles]
+        return min(ok, key=lambda c: c.lut) if ok else None
+
+    def best_within_area(self, max_lut: float) -> Optional[Candidate]:
+        ok = [c for c in self.candidates if c.lut <= max_lut]
+        return min(ok, key=lambda c: c.cycles) if ok else None
+
+    def min_energy(self) -> Candidate:
+        return min(self.candidates, key=lambda c: c.energy_mj)
+
+
+def lhr_grid(cfg: AcceleratorConfig, max_lhr: int = 256,
+             max_candidates: int = 200_000) -> np.ndarray:
+    """All per-layer power-of-two LHR vectors (capped at layer size)."""
+    axes = []
+    for layer in cfg.layers:
+        cap = min(max_lhr, layer.logical)
+        vals = [1]
+        while vals[-1] * 2 <= cap:
+            vals.append(vals[-1] * 2)
+        axes.append(vals)
+    n = int(np.prod([len(a) for a in axes]))
+    if n > max_candidates:
+        raise ValueError(f"{n} candidates exceed cap {max_candidates}; "
+                         f"restrict max_lhr or sweep layerwise")
+    return np.array(list(itertools.product(*axes)), dtype=np.int64)
+
+
+def pareto_mask(cycles: np.ndarray, lut: np.ndarray) -> np.ndarray:
+    """Non-dominated mask for minimizing both objectives."""
+    order = np.lexsort((lut, cycles))           # by cycles, then lut
+    mask = np.zeros(len(cycles), dtype=bool)
+    best_lut = np.inf
+    for i in order:
+        if lut[i] < best_lut - 1e-9:
+            mask[i] = True
+            best_lut = lut[i]
+    return mask
+
+
+def sweep(cfg: AcceleratorConfig, counts: Sequence[np.ndarray],
+          max_lhr: int = 256,
+          lhr_matrix: Optional[np.ndarray] = None) -> DSEResult:
+    """Evaluate every candidate LHR vector against a spike trace.
+
+    ``counts``: per-layer (T,) traffic (trace or published averages).
+    """
+    lhr = lhr_matrix if lhr_matrix is not None else lhr_grid(cfg, max_lhr)
+    cycles = cycle_model.latency_cycles(cfg, counts, lhr_matrix=lhr)
+    lut = resources.estimate_lut_vector(cfg, lhr)
+    mask = pareto_mask(cycles, lut)
+    cands = []
+    for i in range(len(lhr)):
+        c = cfg.with_lhr(tuple(int(x) for x in lhr[i]))
+        cands.append(Candidate(
+            lhr=tuple(int(x) for x in lhr[i]),
+            cycles=float(cycles[i]), lut=float(lut[i]),
+            energy_mj=resources.energy_mj(c, counts, float(cycles[i])),
+            pareto=bool(mask[i])))
+    return DSEResult(config=cfg, candidates=cands)
+
+
+def sweep_spike_train_length(cfg: AcceleratorConfig,
+                             counts_per_t: dict[int, Sequence[np.ndarray]],
+                             lhr: Sequence[int]) -> dict[int, float]:
+    """Latency as a function of spike-train length T (paper Fig. 7b)."""
+    out = {}
+    c = cfg.with_lhr(lhr)
+    for T, counts in counts_per_t.items():
+        out[T] = float(cycle_model.latency_cycles(
+            dataclasses.replace(c, num_steps=T), counts))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class MemBlockCandidate:
+    blocks: tuple[int, ...]      # memory blocks per layer
+    cycles: float
+    lut: float
+    bram: int
+
+
+def sweep_memory_blocks(cfg: AcceleratorConfig, counts: Sequence[np.ndarray],
+                        divisors: Sequence[int] = (1, 2, 4, 8)
+                        ) -> list[MemBlockCandidate]:
+    """Explore memory blocks per layer (paper Sec. IV: "modifications can be
+    made to the hardware configuration (e.g. ... reduce the memory blocks)").
+
+    Fewer blocks than NUs serialize weight reads (``LayerHW.contention``)
+    but shrink the BRAM + mapping-logic budget; the sweep exposes the
+    latency/area trade at fixed LHR.
+    """
+    out = []
+    for div in divisors:
+        layers = tuple(
+            dataclasses.replace(l, mem_blocks=max(1, l.num_nus // div))
+            for l in cfg.layers)
+        c = dataclasses.replace(cfg, layers=layers)
+        cycles = float(cycle_model.latency_cycles(c, counts))
+        res = resources.estimate(c)
+        out.append(MemBlockCandidate(
+            blocks=tuple(l.num_mem_blocks for l in layers),
+            cycles=cycles, lut=res.lut, bram=res.bram36))
+    return out
+
+
+def sweep_weight_bits(cfg: AcceleratorConfig,
+                      bits_options: Sequence[int] = (4, 6, 8, 12, 16)
+                      ) -> dict[int, int]:
+    """BRAM footprint vs synapse weight precision (paper Sec. III notes
+    weight quantization "significantly affects the system's memory
+    requirements").  Accuracy impact is measured separately with the
+    fixed-point validator (benchmarks/bench_extensions.py)."""
+    out = {}
+    for bits in bits_options:
+        layers = tuple(dataclasses.replace(l, weight_bits=bits)
+                       for l in cfg.layers)
+        out[bits] = resources.estimate(
+            dataclasses.replace(cfg, layers=layers)).bram36
+    return out

@@ -1,0 +1,78 @@
+"""Spike encodings and population decoding (paper Secs. II-A, VI-C).
+
+* **Rate coding** — pixel intensity -> Bernoulli spike probability per time
+  step (the paper's "standard rate coding").
+* **Population coding** — the classification layer holds ``PCR`` neurons per
+  class (paper: "population coding ratio"); the predicted class is the
+  argmax of summed spike counts pooled per class.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rate_encode(key: jax.Array, x: jax.Array, num_steps: int) -> jax.Array:
+    """Bernoulli rate code.  ``x`` in [0,1], shape (B, ...) ->
+    spikes (T, B, ...) in {0,1}."""
+    probs = jnp.broadcast_to(x, (num_steps,) + x.shape)
+    return jax.random.bernoulli(key, probs).astype(jnp.float32)
+
+
+def constant_current_encode(x: jax.Array, num_steps: int) -> jax.Array:
+    """Direct (constant-current) encoding: the analog input is applied as the
+    synaptic current at every step.  Used for ablations."""
+    return jnp.broadcast_to(x, (num_steps,) + x.shape)
+
+
+def ttfs_encode(x: jax.Array, num_steps: int) -> jax.Array:
+    """Time-to-first-spike coding (paper Sec. II-A): brighter pixels spike
+    earlier; each neuron spikes at most once.  x in [0,1] -> (T, B, ...)
+    with a single spike at step floor((1-x)*(T-1)); x == 0 never spikes."""
+    t_spike = jnp.floor((1.0 - x) * (num_steps - 1)).astype(jnp.int32)
+    steps = jnp.arange(num_steps, dtype=jnp.int32).reshape(
+        (num_steps,) + (1,) * x.ndim)
+    spikes = (steps == t_spike[None]).astype(jnp.float32)
+    return spikes * (x[None] > 0)
+
+
+def burst_encode(key: jax.Array, x: jax.Array, num_steps: int,
+                 max_burst: int = 4) -> jax.Array:
+    """Burst coding (paper Sec. II-A): intensity maps to the number of
+    consecutive leading spikes (a burst of up to ``max_burst``)."""
+    n_spikes = jnp.round(x * max_burst).astype(jnp.int32)
+    steps = jnp.arange(num_steps, dtype=jnp.int32).reshape(
+        (num_steps,) + (1,) * x.ndim)
+    return (steps < n_spikes[None]).astype(jnp.float32)
+
+
+def population_pool(spike_counts: jax.Array, num_classes: int) -> jax.Array:
+    """Pool output-layer spike counts (..., num_classes*pcr) -> (..., num_classes).
+
+    Neurons are laid out class-major: neuron ``i`` belongs to class
+    ``i // pcr`` — the layout the hardware generator assumes when sizing the
+    output layer's NUs.
+    """
+    *lead, n = spike_counts.shape
+    assert n % num_classes == 0, (n, num_classes)
+    pcr = n // num_classes
+    pooled = spike_counts.reshape(*lead, num_classes, pcr).sum(-1)
+    return pooled
+
+
+def population_decode(spike_train: jax.Array, num_classes: int) -> jax.Array:
+    """(T, B, num_classes*pcr) spike train -> (B,) predicted class."""
+    counts = spike_train.sum(0)
+    return jnp.argmax(population_pool(counts, num_classes), axis=-1)
+
+
+def rate_loss(spike_train: jax.Array, labels: jax.Array, num_classes: int) -> jax.Array:
+    """Cross-entropy on population-pooled spike-rate logits.
+
+    Matches snntorch's rate-coded CE: the summed spike count per class pool
+    acts as the logit.
+    """
+    counts = spike_train.sum(0)                       # (B, n_out)
+    logits = population_pool(counts, num_classes)     # (B, C)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))

@@ -1,0 +1,77 @@
+"""Leaky Integrate-and-Fire dynamics with surrogate-gradient spikes.
+
+Forward semantics match the paper (Sec. V-C): at every time step a neuron's
+membrane potential is
+
+    U[t] = beta * U[t-1] + I[t] + bias - reset
+
+with a spike ``S[t] = H(U[t] - theta)`` and reset-by-subtraction
+(``reset = theta * S[t-1]``, snntorch's default for the ``Leaky`` neuron the
+authors train with).  The Heaviside is non-differentiable; training uses the
+fast-sigmoid surrogate (Zenke & Ganguli) exactly as snntorch's
+``surrogate.fast_sigmoid``:
+
+    dS/dU ~= 1 / (1 + slope * |U - theta|)^2
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_SLOPE = 25.0
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def spike_fn(v: jax.Array, slope: float = DEFAULT_SLOPE) -> jax.Array:
+    """Heaviside step with fast-sigmoid surrogate gradient.
+
+    ``v`` is the membrane potential *relative to threshold* (u - theta).
+    """
+    return (v > 0).astype(v.dtype)
+
+
+def _spike_fwd(v, slope):
+    return spike_fn(v, slope), v
+
+
+def _spike_bwd(slope, v, g):
+    surr = 1.0 / jnp.square(1.0 + slope * jnp.abs(v))
+    return (g * surr,)
+
+
+spike_fn.defvjp(_spike_fwd, _spike_bwd)
+
+
+@dataclasses.dataclass(frozen=True)
+class LIFParams:
+    """Static neuron constants (per layer)."""
+    beta: float = 0.95          # leak factor
+    threshold: float = 1.0      # firing threshold
+    slope: float = DEFAULT_SLOPE
+    reset_mechanism: str = "subtract"   # "subtract" | "zero"
+
+
+def lif_step(u_prev: jax.Array, s_prev: jax.Array, current: jax.Array,
+             p: LIFParams) -> tuple[jax.Array, jax.Array]:
+    """One LIF update.  Returns (u, s).
+
+    The hardware NU performs exactly this per neuron (paper Sec. V-C):
+    leak-multiply, add accumulated synaptic current (+bias folded into
+    ``current``), threshold-compare, reset.
+    """
+    if p.reset_mechanism == "subtract":
+        reset = p.threshold * s_prev
+        u = p.beta * u_prev + current - reset
+    elif p.reset_mechanism == "zero":
+        u = p.beta * u_prev * (1.0 - s_prev) + current
+    else:
+        raise ValueError(f"unknown reset mechanism {p.reset_mechanism!r}")
+    s = spike_fn(u - p.threshold, p.slope)
+    return u, s
+
+
+def lif_init_state(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)

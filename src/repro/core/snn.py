@@ -1,0 +1,255 @@
+"""Spiking network definition (the paper's model substrate, in JAX).
+
+Networks are declared as a sequence of layer specs (``Dense``, ``Conv``,
+``MaxPool``) mirroring the topologies in the paper's Table I (net-1..net-5).
+The temporal dimension is driven by ``lax.scan`` (BPTT unrolls through it);
+every spiking layer's output train is returned so that
+
+* ``repro.core.sparsity`` can reproduce the Fig.-1 firing-ratio analysis, and
+* ``repro.core.accelerator.cycle_model`` can be driven by the *actual* spike
+  traffic of the trained model — the paper's "dump spikes from snntorch"
+  step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import LIFParams, lif_step
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Layer specs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Dense:
+    features: int
+    lif: LIFParams = LIFParams()
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv:
+    features: int
+    kernel: int = 3
+    stride: int = 1
+    padding: str = "SAME"
+    lif: LIFParams = LIFParams()
+
+
+@dataclasses.dataclass(frozen=True)
+class MaxPool:
+    """Spike OR-pooling, non-overlapping (paper Sec. V-C: 2x2 OR gate)."""
+    window: int = 2
+
+
+LayerSpec = Union[Dense, Conv, MaxPool]
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNConfig:
+    """A full spiking model: topology + coding hyper-parameters."""
+    name: str
+    input_shape: tuple[int, ...]          # (H, W, C) for conv nets, (D,) for MLPs
+    layers: tuple[LayerSpec, ...]
+    num_classes: int
+    pcr: int = 1                          # population-coding ratio (neurons/class)
+    num_steps: int = 25                   # spike-train length T
+
+    @property
+    def output_features(self) -> int:
+        return self.num_classes * self.pcr
+
+    def layer_sizes(self) -> list[int]:
+        """Logical neuron count of every *spiking* layer (used for LHR sizing)."""
+        sizes = []
+        shape = self.input_shape
+        for spec in self.layers:
+            shape = _out_shape(spec, shape)
+            if isinstance(spec, (Dense, Conv)):
+                sizes.append(int(math.prod(shape)))
+        return sizes
+
+    def spiking_layers(self) -> list[LayerSpec]:
+        return [l for l in self.layers if isinstance(l, (Dense, Conv))]
+
+
+def _out_shape(spec: LayerSpec, in_shape: tuple[int, ...]) -> tuple[int, ...]:
+    if isinstance(spec, Dense):
+        return (spec.features,)
+    if isinstance(spec, Conv):
+        h, w, _ = in_shape
+        if spec.padding == "SAME":
+            oh, ow = -(-h // spec.stride), -(-w // spec.stride)
+        else:
+            oh = (h - spec.kernel) // spec.stride + 1
+            ow = (w - spec.kernel) // spec.stride + 1
+        return (oh, ow, spec.features)
+    if isinstance(spec, MaxPool):
+        h, w, c = in_shape
+        return (h // spec.window, w // spec.window, c)
+    raise TypeError(spec)
+
+
+def output_shapes(cfg: SNNConfig) -> list[tuple[int, ...]]:
+    shapes, shape = [], cfg.input_shape
+    for spec in cfg.layers:
+        shape = _out_shape(spec, shape)
+        shapes.append(shape)
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, cfg: SNNConfig, dtype=jnp.float32) -> PyTree:
+    params = []
+    shape = cfg.input_shape
+    for spec in cfg.layers:
+        if isinstance(spec, Dense):
+            fan_in = int(math.prod(shape))
+            key, sub = jax.random.split(key)
+            w = jax.random.normal(sub, (fan_in, spec.features), dtype) / math.sqrt(fan_in)
+            params.append({"w": w, "b": jnp.zeros((spec.features,), dtype)})
+        elif isinstance(spec, Conv):
+            cin = shape[-1]
+            fan_in = spec.kernel * spec.kernel * cin
+            key, sub = jax.random.split(key)
+            w = jax.random.normal(
+                sub, (spec.kernel, spec.kernel, cin, spec.features), dtype
+            ) / math.sqrt(fan_in)
+            params.append({"w": w, "b": jnp.zeros((spec.features,), dtype)})
+        else:
+            params.append({})
+        shape = _out_shape(spec, shape)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _layer_current(spec: LayerSpec, p: PyTree, s_in: jax.Array) -> jax.Array:
+    """Synaptic current for one layer given the pre-synaptic spike tensor.
+
+    The binary matmul here is the accelerator's accumulate phase; on TPU it is
+    served by ``repro.kernels.spike_gemm`` (block-skip Pallas kernel) — the
+    pure-jnp path below is the reference semantics.
+    """
+    if isinstance(spec, Dense):
+        flat = s_in.reshape(s_in.shape[0], -1)
+        return flat @ p["w"] + p["b"]
+    if isinstance(spec, Conv):
+        out = jax.lax.conv_general_dilated(
+            s_in, p["w"],
+            window_strides=(spec.stride, spec.stride),
+            padding=spec.padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        return out + p["b"]
+    raise TypeError(spec)
+
+
+def _or_pool(s: jax.Array, window: int) -> jax.Array:
+    return jax.lax.reduce_window(
+        s, -jnp.inf, jax.lax.max,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, window, window, 1),
+        padding="VALID",
+    )
+
+
+def init_states(cfg: SNNConfig, batch: int, dtype=jnp.float32) -> list:
+    states, shape = [], cfg.input_shape
+    for spec in cfg.layers:
+        shape = _out_shape(spec, shape)
+        if isinstance(spec, (Dense, Conv)):
+            z = jnp.zeros((batch,) + shape, dtype)
+            states.append((z, z))
+        else:
+            states.append(None)
+    return states
+
+
+def step(cfg: SNNConfig, params: PyTree, states: list, s_in: jax.Array
+         ) -> tuple[list, list[jax.Array]]:
+    """One time step through all layers.
+
+    Returns (new_states, per-spiking-layer output spikes).  Note the hardware
+    is layer-pipelined so different layers process different time steps
+    concurrently; functionally (spike-to-spike) the result is identical to
+    this sequential sweep, which is what the validation checks.
+    """
+    new_states, spikes = [], []
+    x = s_in
+    for spec, p, st in zip(cfg.layers, params, states):
+        if isinstance(spec, (Dense, Conv)):
+            cur = _layer_current(spec, p, x)
+            u_prev, s_prev = st
+            u, s = lif_step(u_prev, s_prev, cur, spec.lif)
+            new_states.append((u, s))
+            spikes.append(s)
+            x = s
+        elif isinstance(spec, MaxPool):
+            x = _or_pool(x, spec.window)
+            new_states.append(None)
+        else:
+            raise TypeError(spec)
+    return new_states, spikes
+
+
+def apply(cfg: SNNConfig, params: PyTree, spike_input: jax.Array,
+          return_all_layers: bool = False):
+    """Run the net over a (T, B, ...) input spike train.
+
+    Returns the output layer's (T, B, n_out) spike train; with
+    ``return_all_layers`` also every hidden layer's train (instrumentation).
+    """
+    batch = spike_input.shape[1]
+    states0 = init_states(cfg, batch)
+
+    def scan_fn(states, s_in):
+        new_states, spikes = step(cfg, params, states, s_in)
+        out = spikes if return_all_layers else spikes[-1]
+        return new_states, out
+
+    _, collected = jax.lax.scan(scan_fn, states0, spike_input)
+    return collected
+
+
+def spike_counts_per_layer(cfg: SNNConfig, params: PyTree,
+                           spike_input: jax.Array) -> list[jax.Array]:
+    """Per-layer **input** spike counts, shape (T, B) each — the traffic
+    statistic that drives the accelerator cycle model.
+
+    Entry ``l`` counts spikes entering spiking layer ``l`` (so entry 0 counts
+    the encoded input train).  Pooling between layers is applied before
+    counting, because the hardware's ECU sees the pooled train.
+    """
+    all_spikes = apply(cfg, params, spike_input, return_all_layers=True)
+    # Build the input train of each spiking layer: input spikes, then each
+    # spiking layer's output (pooled if a MaxPool follows it).
+    trains = [spike_input]
+    spiking_idx = 0
+    layer_list = list(cfg.layers)
+    for i, spec in enumerate(layer_list):
+        if isinstance(spec, (Dense, Conv)):
+            train = all_spikes[spiking_idx]
+            # apply any pooling that immediately follows
+            j = i + 1
+            while j < len(layer_list) and isinstance(layer_list[j], MaxPool):
+                w = layer_list[j].window
+                train = jax.vmap(lambda s: _or_pool(s, w))(train)
+                j += 1
+            trains.append(train)
+            spiking_idx += 1
+    # drop the final output train: it feeds no further layer
+    trains = trains[:-1]
+    return [t.reshape(t.shape[0], t.shape[1], -1).sum(-1) for t in trains]

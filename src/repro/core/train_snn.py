@@ -1,0 +1,120 @@
+"""SNN training driver (the paper's "Training Phase").
+
+Surrogate-gradient descent (fast-sigmoid) + BPTT through the ``lax.scan``
+time loop, rate-coded inputs, population-coded outputs, rate cross-entropy.
+After training, ``dump_traces`` extracts the spike traffic + weights that the
+Configuration Phase feeds to the accelerator model — the JAX equivalent of
+the paper's snntorch dump.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core import encoding, snn
+from repro.data import synthetic
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: PyTree
+    train_loss: list[float]
+    test_accuracy: float
+    cfg: snn.SNNConfig
+
+
+def loss_fn(cfg: snn.SNNConfig, params: PyTree, key: jax.Array,
+            x: jax.Array, y: jax.Array) -> jax.Array:
+    if x.ndim == 5:        # pre-encoded event data (B, T, H, W, C)
+        spikes_in = x.transpose(1, 0, 2, 3, 4)
+    else:
+        spikes_in = encoding.rate_encode(key, x, cfg.num_steps)
+    out_train = snn.apply(cfg, params, spikes_in)
+    return encoding.rate_loss(out_train, y, cfg.num_classes)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _predict(cfg: snn.SNNConfig, params: PyTree, key: jax.Array, x: jax.Array):
+    if x.ndim == 5:
+        spikes_in = x.transpose(1, 0, 2, 3, 4)
+    else:
+        spikes_in = encoding.rate_encode(key, x, cfg.num_steps)
+    out_train = snn.apply(cfg, params, spikes_in)
+    return encoding.population_decode(out_train, cfg.num_classes)
+
+
+def evaluate(cfg: snn.SNNConfig, params: PyTree, x: np.ndarray, y: np.ndarray,
+             batch_size: int = 256, seed: int = 1234) -> float:
+    correct, total = 0, 0
+    key = jax.random.key(seed)
+    for i in range(0, len(x), batch_size):
+        key, sub = jax.random.split(key)
+        xb = jnp.asarray(x[i:i + batch_size])
+        pred = _predict(cfg, params, sub, xb)
+        correct += int((np.asarray(pred) == y[i:i + batch_size]).sum())
+        total += len(y[i:i + batch_size])
+    return correct / max(total, 1)
+
+
+def train(cfg: snn.SNNConfig, data: synthetic.Dataset, *,
+          steps: int = 300, batch_size: int = 64, lr: float = 2e-3,
+          seed: int = 0, log_every: int = 50, verbose: bool = False) -> TrainResult:
+    key = jax.random.key(seed)
+    key, pkey = jax.random.split(key)
+    params = snn.init_params(pkey, cfg)
+    tx = optim.adam(lr)
+    opt_state = tx.init(params)
+
+    @jax.jit
+    def train_step(params, opt_state, key, x, y):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, key, x, y))(params)
+        updates, opt_state = tx.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        return params, opt_state, loss
+
+    losses = []
+    it = synthetic.batches(data.x_train, data.y_train, batch_size,
+                           seed=seed, epochs=10_000)
+    for step_i in range(steps):
+        xb, yb = next(it)
+        key, sub = jax.random.split(key)
+        params, opt_state, loss = train_step(
+            params, opt_state, sub, jnp.asarray(xb), jnp.asarray(yb))
+        losses.append(float(loss))
+        if verbose and step_i % log_every == 0:
+            print(f"step {step_i:4d}  loss {float(loss):.4f}")
+
+    acc = evaluate(cfg, params, data.x_test, data.y_test)
+    return TrainResult(params=params, train_loss=losses, test_accuracy=acc, cfg=cfg)
+
+
+def dump_traces(cfg: snn.SNNConfig, params: PyTree, x: np.ndarray,
+                seed: int = 7, max_samples: int = 64) -> dict:
+    """Extract spike-traffic statistics for the accelerator model.
+
+    Returns per-layer input spike counts with shape (T, N) (N = samples) —
+    the Configuration-Phase artifact the cycle model consumes.
+    """
+    key = jax.random.key(seed)
+    xb = jnp.asarray(x[:max_samples])
+    if xb.ndim == 4 and xb.shape[-1] in (1, 2):     # event data (N,T,H,W,C)? no-op
+        pass
+    if xb.ndim == 5:
+        spikes_in = xb.transpose(1, 0, 2, 3, 4)
+    else:
+        spikes_in = encoding.rate_encode(key, xb, cfg.num_steps)
+    counts = snn.spike_counts_per_layer(cfg, params, spikes_in)
+    return {
+        "layer_input_spike_counts": [np.asarray(c) for c in counts],
+        "layer_sizes": cfg.layer_sizes(),
+        "num_steps": cfg.num_steps,
+    }

@@ -1,0 +1,149 @@
+"""Spike-to-spike validation (paper Sec. IV, Simulation & Validation Phase).
+
+The generated hardware is *functionally* validated by checking that its
+output spike train equals the trained model's reference spikes at every time
+step.  Two implementations of the same fixed-point datapath are compared:
+
+* ``HardwareModel`` — faithful to the accelerator's dataflow: the ECU
+  compresses each incoming train into an ascending address list (PENC
+  order), each NU serially walks its assigned neurons per address and
+  accumulates the int weight, then the activation phase applies the
+  fixed-point LIF update (leak multiply is an integer multiply + arithmetic
+  right shift, as in the RTL).
+* ``reference_apply`` — the same arithmetic vectorised (integer matmul).
+
+Because the datapath is integer, accumulation order cannot change results —
+which is exactly why the hardware may process spikes in any order.  The
+validation therefore demands **exact** equality, not allclose.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+FRAC_BITS = 8
+
+
+@dataclasses.dataclass
+class FixedPointNet:
+    """Quantized MLP: weights[l]: (fan_in, n) int32, biases[l]: (n,) int32."""
+    weights: list[np.ndarray]
+    biases: list[np.ndarray]
+    beta_fp: int                 # round(beta * 2^frac)
+    theta_fp: int                # round(threshold * 2^frac) in accumulator scale
+    frac_bits: int = FRAC_BITS
+
+
+def quantize(weights: list[np.ndarray], biases: list[np.ndarray],
+             beta: float, threshold: float,
+             frac_bits: int = FRAC_BITS) -> FixedPointNet:
+    scale = 1 << frac_bits
+    return FixedPointNet(
+        weights=[np.round(np.asarray(w) * scale).astype(np.int32) for w in weights],
+        biases=[np.round(np.asarray(b) * scale).astype(np.int32) for b in biases],
+        beta_fp=int(round(beta * scale)),
+        theta_fp=int(round(threshold * scale)),
+        frac_bits=frac_bits,
+    )
+
+
+def _leak(u: np.ndarray, beta_fp: int, frac_bits: int) -> np.ndarray:
+    # int multiply + arithmetic right shift == the RTL's leak datapath
+    return (u.astype(np.int64) * beta_fp) >> frac_bits
+
+
+def penc_compress(spike_bits: np.ndarray, chunk: int = 100) -> list[int]:
+    """Chunked priority-encoder compression: ascending addresses within each
+    chunk, chunks scanned in order — the ECU's shift-register content."""
+    addrs = []
+    n = len(spike_bits)
+    for start in range(0, n, chunk):
+        for off in np.nonzero(spike_bits[start:start + chunk])[0]:
+            addrs.append(start + int(off))
+    return addrs
+
+
+class HardwareModel:
+    """Serial functional model of the accelerator datapath (single sample)."""
+
+    def __init__(self, net: FixedPointNet, lhr: list[int] | None = None):
+        self.net = net
+        self.lhr = lhr or [1] * len(net.weights)
+
+    def run(self, spike_input: np.ndarray) -> np.ndarray:
+        """spike_input: (T, fan_in) {0,1}.  Returns (T, n_out) spikes."""
+        net = self.net
+        T = spike_input.shape[0]
+        u = [np.zeros(w.shape[1], np.int64) for w in net.weights]
+        s = [np.zeros(w.shape[1], np.int64) for w in net.weights]
+        out = np.zeros((T, net.weights[-1].shape[1]), np.int64)
+        for t in range(T):
+            x = spike_input[t].astype(np.int64)
+            for l, (w, b) in enumerate(zip(net.weights, net.biases)):
+                addrs = penc_compress(x)
+                n_neurons = w.shape[1]
+                acc = np.zeros(n_neurons, np.int64)
+                # NUs partitioned by base address; each walks its neurons
+                # serially per spike address (paper Sec. V-C)
+                lhr = self.lhr[l]
+                for base in range(0, n_neurons, lhr):
+                    hi = min(base + lhr, n_neurons)
+                    for a in addrs:
+                        for n_i in range(base, hi):
+                            acc[n_i] += w[a, n_i]
+                # activation phase: leak + accumulate + bias, threshold, reset
+                u[l] = (_leak(u[l], net.beta_fp, net.frac_bits)
+                        + acc + b - net.theta_fp * s[l])
+                s[l] = (u[l] >= net.theta_fp).astype(np.int64)
+                x = s[l]
+            out[t] = s[-1]
+        return out
+
+
+def reference_apply(net: FixedPointNet, spike_input: np.ndarray) -> np.ndarray:
+    """Vectorised fixed-point reference (integer matmul), same arithmetic."""
+    T = spike_input.shape[0]
+    u = [np.zeros(w.shape[1], np.int64) for w in net.weights]
+    s = [np.zeros(w.shape[1], np.int64) for w in net.weights]
+    out = np.zeros((T, net.weights[-1].shape[1]), np.int64)
+    for t in range(T):
+        x = spike_input[t].astype(np.int64)
+        for l, (w, b) in enumerate(zip(net.weights, net.biases)):
+            acc = x @ w.astype(np.int64)
+            u[l] = (_leak(u[l], net.beta_fp, net.frac_bits)
+                    + acc + b - net.theta_fp * s[l])
+            s[l] = (u[l] >= net.theta_fp).astype(np.int64)
+            x = s[l]
+        out[t] = s[-1]
+    return out
+
+
+def validate(net: FixedPointNet, spike_input: np.ndarray,
+             lhr: list[int] | None = None) -> bool:
+    """Exact spike-to-spike equality between hardware model and reference."""
+    hw = HardwareModel(net, lhr).run(spike_input)
+    ref = reference_apply(net, spike_input)
+    return bool(np.array_equal(hw, ref))
+
+
+def reference_apply_batch(net: FixedPointNet,
+                          spike_input: np.ndarray) -> np.ndarray:
+    """Vectorised fixed-point forward over a batch.
+
+    spike_input: (T, B, fan_in) -> output spikes (T, B, n_out).  Used for
+    quantization-accuracy studies (weight_bits DSE)."""
+    T, B = spike_input.shape[:2]
+    u = [np.zeros((B, w.shape[1]), np.int64) for w in net.weights]
+    s = [np.zeros((B, w.shape[1]), np.int64) for w in net.weights]
+    out = np.zeros((T, B, net.weights[-1].shape[1]), np.int64)
+    for t in range(T):
+        x = spike_input[t].astype(np.int64)
+        for l, (w, b) in enumerate(zip(net.weights, net.biases)):
+            acc = x @ w.astype(np.int64)
+            u[l] = (_leak(u[l], net.beta_fp, net.frac_bits)
+                    + acc + b[None] - net.theta_fp * s[l])
+            s[l] = (u[l] >= net.theta_fp).astype(np.int64)
+            x = s[l]
+        out[t] = s[-1]
+    return out

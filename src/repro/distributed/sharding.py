@@ -1,0 +1,324 @@
+"""Per-architecture sharding rules.
+
+Conventions (DESIGN.md §5):
+  * "model" (M, 16-way): tensor-parallel dims — flattened head projections,
+    d_ff, vocab, MoE experts (when E % 16 == 0), SSD heads, cache head_dim.
+  * "data" (D, 16-way) and "pod" (P, 2-way): the global batch; additionally
+    the FSDP axis for very large models (optimizer state + params shard over
+    D), and the cache *sequence* axis when batch == 1 (long_500k).
+  * Projections are sharded on their flattened output dim (e.g. n_heads *
+    head_dim), never on a raw head count — this keeps every sharded dim
+    divisible by 16 across all ten assigned archs (llama's 24 heads flatten
+    to 3072 = 16 * 192).
+
+The rules are path+shape driven so one engine serves every family.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+PyTree = Any
+
+# archs whose optimizer state / params additionally shard over "data" (ZeRO)
+FSDP_ARCHS = {"arctic-480b", "qwen2-vl-72b", "mixtral-8x7b", "chatglm3-6b"}
+
+
+def _path_str(path) -> str:
+    return "/".join(getattr(k, "key", getattr(k, "idx", str(k))) and
+                    str(getattr(k, "key", getattr(k, "idx", ""))) for k in path)
+
+
+def _divisible(n: int, mesh, axis: str) -> bool:
+    return n % mesh.shape[axis] == 0
+
+
+def param_spec(path: str, shape: tuple[int, ...], cfg: ArchConfig,
+               mesh) -> P:
+    """Sharding spec for one parameter leaf.
+
+    ``shape`` includes the stacked-layer leading dim (scan layout): specs
+    lead with None for it.
+    """
+    lead = (None,)  # stacked layers / groups dims (never sharded)
+    nd = len(shape)
+    is_stacked = ("layers/" in path or "mamba/" in path or
+                  "encoder/" in path or "decoder/" in path)
+    core = shape[1:] if is_stacked else shape
+    if "mamba/" in path:                  # (ng, every, ...) double-stacked
+        core = shape[2:]
+        lead = (None, None)
+    if not is_stacked:
+        lead = ()
+
+    def with_lead(*spec):
+        return P(*lead, *spec)
+
+    M = "model"
+    # ---- embeddings / unembedding ----
+    if path.endswith("embed/embedding"):
+        # Vocab-sharded.  (A d-sharded table avoids the per-lookup table
+        # all-gather, but measured on qwen2-vl prefill it leaks d-sharding
+        # into downstream buffers and costs +27 GB/device residents for a
+        # -13% wire win — see EXPERIMENTS.md §Perf qwen iterations; the
+        # vocab-sharded layout wins on the binding constraint, HBM.)
+        return P(M, None)
+    if "lm_head" in path:
+        return with_lead(None, M) if len(core) == 2 else with_lead(None)
+    # ---- MoE ----
+    if "/moe/" in path or path.startswith("moe/"):
+        if "router" in path:
+            return with_lead(*([None] * len(core)))
+        if len(core) == 3:  # (E, d, ff) / (E, ff, d)
+            if cfg.moe and _divisible(cfg.moe.num_experts, mesh, M):
+                return with_lead(M, None, None)        # expert parallel
+            # few experts (mixtral): tensor-parallel on each expert's ff
+            # dim; the dispatch capacity dim C is data-sharded in
+            # moe_apply, so gate/up need no collective and down pays one
+            # (E, C/16, d) partial all-reduce per layer (EXPERIMENTS.md
+            # §Perf, mixtral iterations — both the FSDP d@data layout and
+            # the 2D ff@(model,data) layout lose to this by >10x wire)
+            ff_dim = 1 if "w_down" in path else 2
+            spec = [None, None, None]
+            spec[ff_dim] = M
+            return with_lead(*spec)
+        # dense-residual MLP inside the moe dict
+        if "w_down" in path:
+            return with_lead(M, None)
+        if "w_gate" in path or "w_up" in path:
+            return with_lead(None, M)
+        return with_lead(*([None] * len(core)))
+    # ---- attention / MLP projections ----
+    if any(k in path for k in ("wq", "wk", "wv")):
+        return with_lead(None, M)
+    if "wo" in path:
+        return with_lead(M, None)
+    if "w_gate" in path or "w_up" in path:
+        return with_lead(None, M)
+    if "w_down" in path:
+        return with_lead(M, None)
+    # ---- SSM block ----
+    if "in_proj" in path:
+        return with_lead(None, M)
+    if "out_proj" in path:
+        return with_lead(M, None)
+    if "conv_w" in path:
+        return with_lead(None, M)
+    if "conv_b" in path:
+        return with_lead(M)
+    # ---- norms, biases, scalars ----
+    return with_lead(*([None] * len(core)))
+
+
+def param_specs(cfg: ArchConfig, params_shapes: PyTree, mesh,
+                fsdp: Optional[bool] = None) -> PyTree:
+    fsdp = cfg.name in FSDP_ARCHS if fsdp is None else fsdp
+
+    def one(path, leaf):
+        p = jax.tree_util.keystr(path, simple=True, separator="/")
+        spec = param_spec(p, leaf.shape, cfg, mesh)
+        if fsdp:
+            spec = fsdp_extend(spec, leaf.shape, mesh,
+                               skip_tp_experts=False)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def fsdp_extend(spec: P, shape: tuple[int, ...], mesh,
+                axis: str = "data", min_size: int = 1024,
+                skip_tp_experts: bool = True) -> P:
+    """ZeRO-style: shard the largest still-replicated dim over `axis`."""
+    if axis not in mesh.axis_names:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for e in entries:                    # already data-sharded (e.g. 2D ff)
+        if e == axis or (isinstance(e, tuple) and axis in e):
+            return spec
+    # (skip_tp_experts=True leaves TP-inside-expert weights unsharded on
+    # data; measured on mixtral train this LOST to plain FSDP — XLA's
+    # activation-all-reduce route for the d@data contraction is cheaper
+    # than the layouts that avoid it; see EXPERIMENTS.md §Perf iters 2-4.
+    # Kept as an option for the serve path.)
+    if skip_tp_experts and len(shape) >= 3 and any(
+            e == "model" for e in entries[1:]):
+        return spec
+    best, best_size = None, min_size - 1
+    for i, (s, n) in enumerate(zip(entries, shape)):
+        if s is None and n % mesh.shape[axis] == 0 and n > best_size:
+            best, best_size = i, n
+    if best is None:
+        return spec
+    entries[best] = axis
+    return P(*entries)
+
+
+def serve_param_specs(cfg: ArchConfig, params_shapes: PyTree, mesh) -> PyTree:
+    """Decode-time weight sharding: 2D TP across (model x data).
+
+    Training uses FSDP (weights gathered under the compute of a big step);
+    a one-token decode step cannot hide a 150 GB weight all-gather (see
+    EXPERIMENTS.md §Perf, arctic iteration).  Here every large weight is
+    *fully* sharded across both axes with "data" on a NON-contracted dim,
+    so the forward needs no weight resharding — only tiny activation
+    all-reduces.
+    """
+    base = param_specs(cfg, params_shapes, mesh, fsdp=False)
+
+    def extend(spec: P, leaf) -> P:
+        shape = leaf.shape
+        if len(shape) < 2 or "data" not in mesh.axis_names:
+            return spec
+        nd_data = mesh.shape["data"]
+        nd_both = nd_data * mesh.shape["model"]
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        if "data" in entries or any(isinstance(e, tuple) for e in entries):
+            return spec
+        last = len(shape) - 1
+        # output (non-contracted) dim last: prefer sharding it
+        if entries[last] is None and shape[last] % nd_data == 0:
+            entries[last] = "data"
+        elif entries[last] == "model" and shape[last] % nd_both == 0:
+            entries[last] = ("model", "data")
+        else:
+            for i in range(len(shape) - 1, -1, -1):
+                if entries[i] is None and shape[i] % nd_data == 0:
+                    entries[i] = "data"
+                    break
+        return P(*entries)
+
+    return jax.tree.map(extend, base, params_shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Optimizer state specs (mirror the param tree; factored leaves truncated)
+# ---------------------------------------------------------------------------
+
+def opt_state_specs(opt_shapes: PyTree, params_shapes: PyTree,
+                    p_specs: PyTree) -> PyTree:
+    pstruct = jax.tree.structure(params_shapes)
+    p_leaves = jax.tree.leaves(params_shapes)
+    s_leaves = jax.tree.leaves(p_specs, is_leaf=lambda x: isinstance(x, P))
+
+    def match_leaf(leaf, param, spec):
+        if leaf.shape == param.shape:
+            return spec
+        entries = list(spec) + [None] * (len(param.shape) - len(spec))
+        if leaf.shape == param.shape[:-1]:              # adafactor row
+            return P(*entries[:-1])
+        if leaf.shape == param.shape[:-2] + param.shape[-1:]:  # adafactor col
+            return P(*(entries[:-2] + entries[-1:]))
+        return P()
+
+    def rec(sub):
+        if sub is None:
+            return None
+        if isinstance(sub, jax.ShapeDtypeStruct):
+            return P()                                   # scalar state (count)
+        try:
+            if jax.tree.structure(sub) == pstruct:
+                leaves, treedef = jax.tree.flatten(sub)
+                return treedef.unflatten(
+                    [match_leaf(l, p, s)
+                     for l, p, s in zip(leaves, p_leaves, s_leaves)])
+        except Exception:
+            pass
+        if hasattr(sub, "_fields"):
+            return type(sub)(*[rec(getattr(sub, f)) for f in sub._fields])
+        if isinstance(sub, (tuple, list)):
+            return type(sub)(rec(x) for x in sub)
+        if isinstance(sub, dict):
+            return {k: rec(v) for k, v in sub.items()}
+        return P()
+
+    return rec(opt_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+def _baxes(mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def batch_specs(cfg: ArchConfig, batch: PyTree, mesh) -> PyTree:
+    ba = _baxes(mesh)
+
+    def one(path, leaf):
+        p = jax.tree_util.keystr(path, simple=True, separator="/")
+        nb = int(np.prod([mesh.shape[a] for a in
+                          (ba if isinstance(ba, tuple) else (ba,))]))
+        if "positions" in p:               # (3, B, S)
+            return P(None, ba, None) if leaf.shape[1] % nb == 0 else P()
+        if leaf.shape[0] % nb != 0:        # tiny batch (long_500k): replicate
+            return P(*([None] * leaf.ndim))
+        return P(ba, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def cache_specs(cfg: ArchConfig, cache_shapes: PyTree, mesh,
+                batch_size: int) -> PyTree:
+    """KV/state cache sharding.
+
+    batch >= batch-shards: shard batch over (pod?, data), head_dim over model.
+    batch == 1 (long_500k): shard the cache sequence axis over data instead.
+    """
+    ba = _baxes(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in
+                      (ba if isinstance(ba, tuple) else (ba,))]))
+    shard_batch = batch_size % nb == 0
+    M = "model"
+
+    def one(path, leaf):
+        p = jax.tree_util.keystr(path, simple=True, separator="/")
+        if p.endswith("length"):
+            return P()
+        if p.endswith("slot_pos"):          # (B, C)
+            if shard_batch:
+                return P(ba, None)
+            return P(None, "data") if leaf.shape[1] % mesh.shape["data"] == 0 else P()
+        # cache tensors: (L, B, C, n_kv, hd) | (L/ng, B, ...) | (ng, every, B, ...)
+        shape = leaf.shape
+        spec = [None] * leaf.ndim
+        # find the batch dim (== batch_size)
+        try:
+            bpos = shape.index(batch_size)
+        except ValueError:
+            return P(*spec)
+        if shard_batch:
+            spec[bpos] = ba
+        if p.endswith("k") or p.endswith("v") or "cross" in p:
+            # (..., B, C, n_kv, hd): shard the SEQUENCE dim C on "model"
+            # (split-KV / flash-decoding style).  C always divides 16; the
+            # decode softmax becomes partial max/sum + a tiny all-reduce,
+            # with no cache resharding (hd-sharding made GSPMD gather the
+            # whole cache — EXPERIMENTS.md §Perf, arctic iterations).
+            if not shard_batch and shape[-3] % (
+                    mesh.shape["data"] * mesh.shape[M]) == 0:
+                spec[-3] = ("data", M)
+            elif shape[-3] % mesh.shape[M] == 0:
+                spec[-3] = M
+        elif p.endswith("h"):               # SSD state (..., B, H, N, P)
+            if shape[bpos + 1] % mesh.shape[M] == 0:
+                spec[bpos + 1] = M          # heads on model
+        elif "conv" in p:                   # (..., B, W-1, conv_ch)
+            if shape[-1] % mesh.shape[M] == 0:
+                spec[-1] = M
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def to_named(tree_specs: PyTree, mesh) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

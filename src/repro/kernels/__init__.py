@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel ships three layers: <name>.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd public wrappers: padding, flags, permutation), ref.py
+(pure-jnp oracles the tests sweep against).
+"""
+from repro.kernels.ops import (lif_step, spike_gemm, spike_gemm_profiled,
+                               penc_compact, skip_fraction,
+                               firing_rate_permutation, apply_permutation)
+
+__all__ = ["lif_step", "spike_gemm", "spike_gemm_profiled", "penc_compact",
+           "skip_fraction", "firing_rate_permutation", "apply_permutation"]

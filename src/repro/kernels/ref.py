@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Kernel tests sweep shapes/dtypes and assert allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lif_step_ref(u_prev: jax.Array, s_prev: jax.Array, current: jax.Array,
+                 *, beta: float, threshold: float,
+                 reset_mechanism: str = "subtract") -> tuple[jax.Array, jax.Array]:
+    """Reference LIF membrane update (matches repro.core.lif.lif_step
+    forward semantics, no surrogate gradient)."""
+    dt = u_prev.dtype
+    beta = jnp.asarray(beta, dt)
+    threshold = jnp.asarray(threshold, dt)
+    if reset_mechanism == "subtract":
+        u = beta * u_prev + current - threshold * s_prev
+    else:
+        u = beta * u_prev * (1 - s_prev) + current
+    s = (u > threshold).astype(dt)
+    return u, s
+
+
+def spike_gemm_ref(spikes: jax.Array, weights: jax.Array) -> jax.Array:
+    """Dense reference for the spike-driven accumulation: out = S @ W.
+
+    ``spikes``: (M, K) binary in {0,1} (any float dtype); ``weights``: (K, N).
+    Accumulation in fp32 (the kernel uses preferred_element_type=f32).
+    """
+    return jnp.dot(spikes, weights, preferred_element_type=jnp.float32)
+
+
+def penc_compact_ref(spikes: jax.Array, capacity: int
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the PENC compaction kernel: per row, ascending indices of
+    set bits packed to the front, -1 padded, capped at ``capacity``."""
+    B, N = spikes.shape
+    s = spikes > 0
+    pos = jnp.cumsum(s, axis=-1) - s.astype(jnp.int32)
+    iota = jnp.arange(N, dtype=jnp.int32)[None, :]
+    out = jnp.full((B, capacity), -1, jnp.int32)
+    # scatter via comparison (small shapes; oracle clarity over speed)
+    for k in range(capacity):
+        hit = s & (pos == k)
+        idx = jnp.where(hit.any(-1), (iota * hit).sum(-1), -1)
+        out = out.at[:, k].set(idx)
+    counts = s.sum(-1).astype(jnp.int32)
+    return out, counts
+
+
+def block_flags_ref(spikes: jax.Array, bm: int, bk: int) -> jax.Array:
+    """Per (row-block, k-block) spike occupancy — the TPU-granular analogue
+    of the paper's PENC compression (DESIGN.md §2)."""
+    M, K = spikes.shape
+    assert M % bm == 0 and K % bk == 0
+    blocks = spikes.reshape(M // bm, bm, K // bk, bk)
+    return (blocks.sum(axis=(1, 3)) > 0).astype(jnp.int32)

@@ -1,0 +1,182 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede every other import (jax locks device count on first init).
+
+# Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+# on the production meshes and dump memory/cost/collective statistics.
+#
+#     PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_2_3b \
+#         --shape train_4k --mesh single --out artifacts/dryrun
+#     PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+#
+# Success criterion (deliverable e): ``.lower().compile()`` succeeds for the
+# 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh for every supported
+# cell; the JSON artifacts feed EXPERIMENTS.md §Dry-run and §Roofline.
+# NOTE: the XLA_FLAGS assignment above must stay the first statement — jax
+# locks the device count on first init (hence also no `from __future__`
+# import, which Python requires to be first).
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ShapeConfig, shape_supported
+from repro.distributed import sharding
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.roofline import analysis
+from repro.serve import engine
+from repro.train import steps
+
+
+def lower_cell(arch_id: str, shape_name: str, mesh,
+               settings: steps.TrainSettings | None = None):
+    """Lower one (arch x shape) cell.  Returns (lowered, meta)."""
+    cfg = registry.load_arch(arch_id)
+    shape = SHAPES[shape_name]
+    ok, why = shape_supported(cfg, shape)
+    if not ok:
+        raise analysis.CellSkipped(why)
+    settings = settings or default_settings(arch_id, shape)
+    # microbatches beyond global_batch / batch_shards leave fractional rows
+    # per device — GSPMD replicates the whole microbatch across pods
+    # (EXPERIMENTS.md §Multi-pod).  Clamp to the mesh.
+    import dataclasses as _dc
+    batch_shards = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            batch_shards *= mesh.shape[ax]
+    max_micro = max(1, shape.global_batch // batch_shards)
+    if settings.microbatches > max_micro:
+        settings = _dc.replace(settings, microbatches=max_micro)
+
+    if shape.kind == "train":
+        train_step = steps.build_train_step(cfg, settings, mesh)
+        p_shard, o_shard, params_s, opt_s = steps.state_shardings(
+            cfg, settings, mesh)
+        batch = registry.train_input_specs(cfg, shape)
+        b_specs = sharding.batch_specs(cfg, batch, mesh)
+        b_shard = sharding.to_named(b_specs, mesh)
+        jitted = jax.jit(train_step,
+                         in_shardings=(p_shard, o_shard, b_shard),
+                         out_shardings=(p_shard, o_shard, None),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(params_s, opt_s, batch)
+    elif shape.kind == "prefill":
+        prefill_step = engine.build_prefill_step(cfg, shape.seq_len)
+        p_shard, b_shard, params_s, cache_s = engine.serve_shardings(
+            cfg, shape, mesh, mode="prefill")
+        batch = registry.prefill_input_specs(cfg, shape)
+        bs = sharding.to_named(sharding.batch_specs(cfg, batch, mesh), mesh)
+        jitted = jax.jit(prefill_step, in_shardings=(p_shard, bs),
+                         out_shardings=(None, b_shard["cache"]))
+        lowered = jitted.lower(params_s, batch)
+    else:  # decode
+        decode_step = engine.build_decode_step(cfg)
+        p_shard, b_shard, params_s, cache_s = engine.serve_shardings(
+            cfg, shape, mesh)
+        batch = {"token": jax.ShapeDtypeStruct((shape.global_batch, 1),
+                                               jnp.int32),
+                 "cache": cache_s}
+        jitted = jax.jit(decode_step, in_shardings=(p_shard, b_shard),
+                         out_shardings=None,
+                         donate_argnums=(1,))
+        lowered = jitted.lower(params_s, batch)
+    return lowered, {"arch": arch_id, "shape": shape_name,
+                     "kind": shape.kind}
+
+
+def default_settings(arch_id: str, shape: ShapeConfig) -> steps.TrainSettings:
+    """Per-arch training settings sized so the per-device footprint fits a
+    16 GB v5e chip (microbatching bounds stashed activations; adafactor
+    bounds optimizer state for the two largest models)."""
+    micro = {"arctic_480b": 16, "qwen2_vl_72b": 16, "mixtral_8x7b": 16,
+             "chatglm3_6b": 4, "granite_3_2b": 4, "llama3_2_3b": 4,
+             "tinyllama_1_1b": 2, "zamba2_2_7b": 4, "mamba2_780m": 2,
+             "seamless_m4t_large_v2": 8}.get(arch_id, 2)
+    opt = "adafactor" if arch_id in ("arctic_480b", "qwen2_vl_72b") else "adamw"
+    return steps.TrainSettings(microbatches=micro, optimizer=opt, remat=True)
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
+             out_dir: str | None = None) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    record = {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+              "devices": int(mesh.devices.size)}
+    try:
+        with mesh:
+            lowered, meta = lower_cell(arch_id, shape_name, mesh)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            record.update(meta, status="ok",
+                          lower_s=round(t_lower, 1),
+                          compile_s=round(t_compile, 1))
+            record["memory"] = analysis.memory_summary(compiled)
+            record["cost"] = analysis.cost_summary(compiled)
+            record["collectives"] = analysis.collective_summary(
+                compiled, lowered)
+            print(compiled.memory_analysis())
+            print({k: v for k, v in record["cost"].items()})
+    except analysis.CellSkipped as e:
+        record.update(status="skipped", reason=str(e))
+    except Exception as e:                                  # noqa: BLE001
+        record.update(status="failed", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+    record["total_s"] = round(time.time() - t0, 1)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir,
+                            f"{arch_id}__{shape_name}__{mesh_kind}.json")
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells whose JSON already reports ok/skipped")
+    args = ap.parse_args()
+
+    archs = registry.ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                path = os.path.join(args.out,
+                                    f"{arch}__{shape}__{mesh_kind}.json")
+                if args.resume and os.path.exists(path):
+                    with open(path) as f:
+                        prev = json.load(f)
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[ resume] {arch} x {shape} x {mesh_kind}",
+                              flush=True)
+                        continue
+                rec = run_cell(arch, shape, mesh_kind, args.out)
+                status = rec["status"]
+                extra = (rec.get("reason") or rec.get("error") or
+                         f"{rec.get('compile_s', 0)}s compile")
+                print(f"[{status:>7}] {arch} x {shape} x {mesh_kind}: {extra}",
+                      flush=True)
+                n_fail += status == "failed"
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Serving launcher: bring up the batched serving loop for an arch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama_1_1b \
+        --batch 4 --max-len 128 --requests 6
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.launch.train import small_config
+from repro.models import registry
+from repro.serve import engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama_1_1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    base = registry.load_arch(args.arch)
+    cfg = base if args.full else small_config(base, args.d_model, args.layers,
+                                              args.vocab)
+    params = registry.init_params(jax.random.key(0), cfg)
+    loop = engine.ServeLoop(cfg, params, batch_size=args.batch,
+                            max_len=args.max_len)
+    rng = np.random.default_rng(0)
+    reqs = [engine.Request(
+        uid=i,
+        prompt=rng.integers(1, cfg.vocab, size=int(rng.integers(4, 12))
+                            ).astype(np.int32),
+        max_new_tokens=args.max_new_tokens)
+        for i in range(args.requests)]
+    for start in range(0, len(reqs), args.batch):
+        batch = reqs[start:start + args.batch]
+        for r in loop.run(batch):
+            print(f"req {r.uid}: {len(r.generated)} tokens")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Training launcher: build the sharded train step for an (arch x mesh),
+run it under checkpoint/restart supervision with the deterministic data
+pipeline.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama_1_1b \
+        --steps 100 --batch 8 --seq 256 --mesh none
+
+``--mesh none`` runs on the host's default devices (CPU smoke / examples);
+``single``/``multi`` build the production meshes (requires the dry-run's
+512 host devices or real hardware).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data import pipeline
+from repro.distributed import sharding
+from repro.distributed.fault_tolerance import SupervisorConfig, TrainSupervisor
+from repro.models import registry
+from repro.train import steps
+
+
+def small_config(base: ArchConfig, d_model: int, layers: int,
+                 vocab: int) -> ArchConfig:
+    """Scale an arch config down (same family wiring) for host-side runs."""
+    heads = max(4, base.n_heads * d_model // max(base.d_model, 1))
+    heads = min(heads, d_model // 16)
+    n_kv = max(1, min(base.n_kv, heads))
+    while heads % n_kv:
+        n_kv -= 1
+    hd = d_model // heads
+    sections = base.mrope_sections
+    if base.rope == "mrope":
+        half = hd // 2
+        a = half // 4
+        b = (half - a) // 2
+        sections = (a, b, half - a - b)
+    return dataclasses.replace(
+        base, num_layers=layers, d_model=d_model, n_heads=heads, n_kv=n_kv,
+        d_ff=d_model * 4 if base.d_ff else 0, vocab=vocab,
+        head_dim=hd, dtype="float32", mrope_sections=sections)
+
+
+def run_training(cfg: ArchConfig, *, steps_n: int, global_batch: int,
+                 seq_len: int, lr: float = 3e-4, mesh=None,
+                 checkpoint_dir: str | None = None,
+                 checkpoint_every: int = 100, microbatches: int = 1,
+                 log_every: int = 10, seed: int = 0,
+                 data_vocab: int | None = None) -> dict:
+    settings = steps.TrainSettings(learning_rate=lr, microbatches=microbatches,
+                                   remat=True, z_loss=1e-4)
+    tx = steps.make_optimizer(settings)
+    params = registry.init_params(jax.random.key(seed), cfg)
+    opt_state = tx.init(params)
+    # data_vocab may be smaller than the model vocab so short demo runs can
+    # actually learn the synthetic chain (token ids stay in-range)
+    dcfg = pipeline.DataConfig(vocab=data_vocab or cfg.vocab,
+                               seq_len=seq_len,
+                               global_batch=global_batch, seed=seed)
+
+    if mesh is not None:
+        p_sh, o_sh, _, _ = steps.state_shardings(cfg, settings, mesh)
+        bspec = sharding.batch_specs(
+            cfg, {"tokens": jax.ShapeDtypeStruct((global_batch, seq_len),
+                                                 jnp.int32),
+                  "labels": jax.ShapeDtypeStruct((global_batch, seq_len),
+                                                 jnp.int32)}, mesh)
+        b_sh = sharding.to_named(bspec, mesh)
+        params = jax.device_put(params, p_sh)
+        opt_state = jax.device_put(opt_state, o_sh)
+        step_fn = jax.jit(steps.build_train_step(cfg, settings, mesh),
+                          in_shardings=(p_sh, o_sh, b_sh),
+                          out_shardings=(p_sh, o_sh, None),
+                          donate_argnums=(0, 1))
+        batch_shardings = b_sh
+    else:
+        step_fn = jax.jit(steps.build_train_step(cfg, settings),
+                          donate_argnums=(0, 1))
+        batch_shardings = None
+
+    losses = []
+    state = {"params": params, "opt": opt_state}
+
+    def one_step(state, i):
+        batch = pipeline.synthetic_lm_batch(dcfg, i)
+        if batch_shardings is not None:
+            batch = {k: jax.device_put(jnp.asarray(v), batch_shardings[k])
+                     for k, v in batch.items()}
+        else:
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        t0 = time.time()
+        params, opt, metrics = step_fn(state["params"], state["opt"], batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if i % log_every == 0:
+            tokens = global_batch * seq_len
+            print(f"step {i:5d}  loss {loss:8.4f}  "
+                  f"grad_norm {float(metrics['grad_norm']):8.3f}  "
+                  f"{tokens/(time.time()-t0):9.0f} tok/s", flush=True)
+        return {"params": params, "opt": opt}
+
+    if checkpoint_dir:
+        sup = TrainSupervisor(
+            SupervisorConfig(checkpoint_dir=checkpoint_dir,
+                             checkpoint_every=checkpoint_every), state)
+        state = sup.run(one_step, steps_n)
+    else:
+        for i in range(steps_n):
+            state = one_step(state, i)
+    return {"state": state, "losses": losses}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama_1_1b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--d-model", type=int, default=256,
+                    help="host-run width (full config via --full)")
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full assigned config (needs a real pod)")
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "single", "multi"])
+    ap.add_argument("--checkpoint-dir", default="")
+    args = ap.parse_args()
+
+    base = registry.load_arch(args.arch)
+    cfg = base if args.full else small_config(base, args.d_model, args.layers,
+                                              args.vocab)
+    mesh = None
+    if args.mesh != "none":
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    out = run_training(cfg, steps_n=args.steps, global_batch=args.batch,
+                       seq_len=args.seq, lr=args.lr, mesh=mesh,
+                       checkpoint_dir=args.checkpoint_dir or None)
+    losses = out["losses"]
+    print(f"first-10 mean loss {np.mean(losses[:10]):.4f} -> "
+          f"last-10 mean {np.mean(losses[-10:]):.4f}")
+
+
+if __name__ == "__main__":
+    main()

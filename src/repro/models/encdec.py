@@ -1,0 +1,229 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2, arXiv:2308.11596).
+
+Modality frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, S_enc, d) — the speech feature extractor
+never runs here.  The backbone is a standard enc-dec transformer: a
+bidirectional encoder over frames and a causal decoder with cross-attention.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers, transformer
+
+PyTree = Any
+
+
+def _acfg(cfg: ArchConfig, causal: bool) -> layers.AttnConfig:
+    return dataclasses.replace(transformer.attn_config(cfg), causal=causal)
+
+
+def init_params(key, cfg: ArchConfig) -> PyTree:
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    ks = jax.random.split(key, 6)
+    acfg = transformer.attn_config(cfg)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "attn_norm": layers.norm_init(cfg.norm, cfg.d_model, dtype),
+            "attn": layers.attn_init(k1, acfg, dtype),
+            "mlp_norm": layers.norm_init(cfg.norm, cfg.d_model, dtype),
+            "mlp": layers.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_kind,
+                                   dtype),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "self_norm": layers.norm_init(cfg.norm, cfg.d_model, dtype),
+            "self_attn": layers.attn_init(k1, acfg, dtype),
+            "cross_norm": layers.norm_init(cfg.norm, cfg.d_model, dtype),
+            "cross_attn": layers.attn_init(k2, acfg, dtype),
+            "mlp_norm": layers.norm_init(cfg.norm, cfg.d_model, dtype),
+            "mlp": layers.mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.mlp_kind,
+                                   dtype),
+        }
+
+    enc = jax.vmap(enc_layer)(jax.random.split(ks[0], cfg.encoder_layers))
+    dec = jax.vmap(dec_layer)(jax.random.split(ks[1], cfg.num_layers))
+    return {
+        "embed": layers.embed_init(ks[2], cfg.vocab_padded, cfg.d_model,
+                                   dtype),
+        "encoder": enc,
+        "decoder": dec,
+        "enc_norm": layers.norm_init(cfg.norm, cfg.d_model, dtype),
+        "final_norm": layers.norm_init(cfg.norm, cfg.d_model, dtype),
+        "lm_head": layers.linear_init(ks[3], cfg.d_model, cfg.vocab_padded,
+                                      dtype),
+    }
+
+
+def encode(params: PyTree, cfg: ArchConfig, frames: jax.Array,
+           remat: bool = False) -> jax.Array:
+    """frames: (B, S_enc, d) precomputed frame embeddings (frontend stub)."""
+    acfg = _acfg(cfg, causal=False)
+    B, S, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = frames
+
+    def body(x, lp):
+        h = layers.norm_apply(cfg.norm, lp["attn_norm"], x)
+        x = x + layers.attention(lp["attn"], acfg, h, positions)
+        h = layers.norm_apply(cfg.norm, lp["mlp_norm"], x)
+        return x + layers.mlp(lp["mlp"], h, cfg.mlp_kind), None
+
+    if remat:
+        # without this, the microbatch scan stashes every microbatch's
+        # encoder activations in fp32 (EXPERIMENTS.md §Perf, seamless note)
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return layers.norm_apply(cfg.norm, params["enc_norm"], x)
+
+
+def _decoder_layer(cfg: ArchConfig, lp: PyTree, x, positions, memory,
+                   self_kv=None, kv_positions=None, kv_valid=None):
+    acfg = transformer.attn_config(cfg)
+    h = layers.norm_apply(cfg.norm, lp["self_norm"], x)
+    kw = {}
+    if self_kv is not None:
+        kw = dict(kv_override=self_kv, kv_positions=kv_positions,
+                  kv_valid=kv_valid)
+    x = x + layers.attention(lp["self_attn"], acfg, h, positions, **kw)
+    h = layers.norm_apply(cfg.norm, lp["cross_norm"], x)
+    if isinstance(memory, tuple):       # precomputed cross K/V (decode path)
+        x = x + layers.attention(lp["cross_attn"], acfg, h, positions,
+                                 kv_override=memory,
+                                 kv_positions=jnp.zeros(
+                                     (x.shape[0], memory[0].shape[1]),
+                                     jnp.int32),
+                                 kv_valid=jnp.ones(
+                                     (x.shape[0], memory[0].shape[1]), bool))
+    else:
+        x = x + layers.attention(lp["cross_attn"], acfg, h, positions,
+                                 cross_kv=memory)
+    h = layers.norm_apply(cfg.norm, lp["mlp_norm"], x)
+    return x + layers.mlp(lp["mlp"], h, cfg.mlp_kind)
+
+
+def forward(params: PyTree, cfg: ArchConfig, batch: dict,
+            remat: bool = False):
+    """Teacher-forced training forward.  batch: frames + tokens."""
+    memory = encode(params, cfg, batch["frames"], remat=remat)
+    x = layers.maybe_shard(layers.embed(params["embed"], batch["tokens"]),
+                           "batch", None, None)
+    B, S = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, lp):
+        return _decoder_layer(cfg, lp, x, positions, memory), None
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    x = layers.norm_apply(cfg.norm, params["final_norm"], x)
+    return layers.linear(params["lm_head"], x), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, max_len: int,
+               enc_len: int = 0) -> PyTree:
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    hd = cfg.resolved_head_dim
+    L = cfg.num_layers
+    enc_len = enc_len or max_len
+    return {
+        "k": jnp.zeros((L, batch_size, max_len, cfg.n_kv, hd), dtype),
+        "v": jnp.zeros((L, batch_size, max_len, cfg.n_kv, hd), dtype),
+        "cross_k": jnp.zeros((L, batch_size, enc_len, cfg.n_kv, hd), dtype),
+        "cross_v": jnp.zeros((L, batch_size, enc_len, cfg.n_kv, hd), dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params: PyTree, cfg: ArchConfig, batch: dict, max_len: int):
+    """Encode source frames, project cross-K/V once per layer, and prime the
+    decoder self-cache with the prompt tokens."""
+    memory = encode(params, cfg, batch["frames"])
+    B, S = batch["tokens"].shape
+    acfg = transformer.attn_config(cfg)
+    x = layers.maybe_shard(layers.embed(params["embed"], batch["tokens"]),
+                           "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    zero_pos = jnp.zeros((B, memory.shape[1]), jnp.int32)
+
+    def body(x, lp):
+        h = layers.norm_apply(cfg.norm, lp["self_norm"], x)
+        k, v = layers.project_kv(lp["self_attn"], acfg, h, positions)
+        x = x + layers.attention(lp["self_attn"], acfg, h, positions,
+                                 kv_override=(k, v), kv_positions=positions)
+        ck = layers.linear(lp["cross_attn"]["wk"], memory).reshape(
+            B, -1, cfg.n_kv, cfg.resolved_head_dim)
+        cv = layers.linear(lp["cross_attn"]["wv"], memory).reshape(
+            B, -1, cfg.n_kv, cfg.resolved_head_dim)
+        h = layers.norm_apply(cfg.norm, lp["cross_norm"], x)
+        x = x + layers.attention(
+            lp["cross_attn"], acfg, h, positions, kv_override=(ck, cv),
+            kv_positions=zero_pos,
+            kv_valid=jnp.ones((B, memory.shape[1]), bool))
+        h = layers.norm_apply(cfg.norm, lp["mlp_norm"], x)
+        x = x + layers.mlp(lp["mlp"], h, cfg.mlp_kind)
+        return x, (k, v, ck, cv)
+
+    x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, params["decoder"])
+    x = layers.norm_apply(cfg.norm, params["final_norm"], x)
+    logits = layers.linear(params["lm_head"], x[:, -1:, :])
+    hd = cfg.resolved_head_dim
+    pad = max_len - S
+    cache = {
+        "k": jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "v": jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "cross_k": cks, "cross_v": cvs,
+        "length": jnp.asarray(S, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params: PyTree, cfg: ArchConfig, token: jax.Array,
+                cache: PyTree):
+    B = token.shape[0]
+    pos_scalar = cache["length"]
+    positions = jnp.broadcast_to(pos_scalar[None, None], (B, 1)).astype(jnp.int32)
+    acfg = transformer.attn_config(cfg)
+    x = layers.maybe_shard(layers.embed(params["embed"], token),
+                           "batch", None, None)
+    C = cache["k"].shape[2]
+    kv_positions = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32)[None], (B, C))
+    kv_valid = kv_positions <= pos_scalar
+
+    def body(x, scanned):
+        lp, ck, cv, xk, xv = scanned
+        h = layers.norm_apply(cfg.norm, lp["self_norm"], x)
+        k, v = layers.project_kv(lp["self_attn"], acfg, h, positions)
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, pos_scalar, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, pos_scalar, 0, 0))
+        x = x + layers.attention(lp["self_attn"], acfg, h, positions,
+                                 kv_override=(ck, cv),
+                                 kv_positions=kv_positions, kv_valid=kv_valid)
+        h = layers.norm_apply(cfg.norm, lp["cross_norm"], x)
+        x = x + layers.attention(
+            lp["cross_attn"], acfg, h, positions, kv_override=(xk, xv),
+            kv_positions=jnp.zeros((B, xk.shape[1]), jnp.int32),
+            kv_valid=jnp.ones((B, xk.shape[1]), bool))
+        h = layers.norm_apply(cfg.norm, lp["mlp_norm"], x)
+        x = x + layers.mlp(lp["mlp"], h, cfg.mlp_kind)
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["decoder"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = layers.norm_apply(cfg.norm, params["final_norm"], x)
+    logits = layers.linear(params["lm_head"], x)
+    new_cache = dict(cache, k=ks, v=vs, length=pos_scalar + 1)
+    return logits, new_cache

@@ -1,0 +1,198 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with a *shared* attention block
+(one parameter set) applied every ``shared_attn_every`` blocks
+(arXiv:2411.15242).
+
+Structured as ``num_groups = L / every`` groups, each group = ``every``
+stacked Mamba2 blocks + one application of the shared attention block.  The
+attention parameters are shared across applications but each application
+keeps its own KV cache (its inputs differ).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers, ssm, transformer
+
+PyTree = Any
+
+
+def _groups(cfg: ArchConfig) -> tuple[int, int]:
+    every = cfg.shared_attn_every
+    assert every and cfg.num_layers % every == 0, (cfg.num_layers, every)
+    return cfg.num_layers // every, every
+
+
+def init_params(key, cfg: ArchConfig) -> PyTree:
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    ng, every = _groups(cfg)
+    k_embed, k_m, k_a, k_mlp, k_head = jax.random.split(key, 5)
+    mkeys = jax.random.split(k_m, cfg.num_layers).reshape(ng, every)
+    mamba = jax.vmap(jax.vmap(
+        lambda k: ssm.init_block(k, cfg, dtype)))(mkeys)  # (ng, every, ...)
+    shared = {
+        "attn_norm": layers.norm_init(cfg.norm, cfg.d_model, dtype),
+        "attn": layers.attn_init(k_a, transformer.attn_config(cfg), dtype),
+        "mlp_norm": layers.norm_init(cfg.norm, cfg.d_model, dtype),
+        "mlp": layers.mlp_init(k_mlp, cfg.d_model, cfg.d_ff, cfg.mlp_kind,
+                               dtype),
+    }
+    return {
+        "embed": layers.embed_init(k_embed, cfg.vocab_padded, cfg.d_model,
+                                   dtype),
+        "mamba": mamba,
+        "shared": shared,
+        "final_norm": layers.rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": layers.linear_init(k_head, cfg.d_model, cfg.vocab_padded,
+                                      dtype),
+    }
+
+
+def _shared_attn(params: PyTree, cfg: ArchConfig, x: jax.Array,
+                 positions: jax.Array, **kv_kw) -> jax.Array:
+    sp = params["shared"]
+    acfg = transformer.attn_config(cfg)
+    h = layers.norm_apply(cfg.norm, sp["attn_norm"], x)
+    x = x + layers.attention(sp["attn"], acfg, h, positions, **kv_kw)
+    h = layers.norm_apply(cfg.norm, sp["mlp_norm"], x)
+    return x + layers.mlp(sp["mlp"], h, cfg.mlp_kind)
+
+
+def forward(params: PyTree, cfg: ArchConfig, batch: dict,
+            remat: bool = False):
+    x = layers.maybe_shard(layers.embed(params["embed"], batch["tokens"]),
+                           "batch", None, None)
+    B, S = batch["tokens"].shape
+    positions = transformer.make_positions(cfg, B, S)
+
+    def group_body(x, gp):
+        def mamba_body(x, lp):
+            return ssm.block_forward(lp, cfg, x), None
+
+        x, _ = jax.lax.scan(mamba_body, x, gp)
+        x = _shared_attn(params, cfg, x, positions)
+        return x, jnp.zeros((), jnp.float32)
+
+    if remat:
+        group_body = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, aux = jax.lax.scan(group_body, x, params["mamba"])
+    x = layers.rmsnorm(params["final_norm"], x)
+    return layers.linear(params["lm_head"], x), jnp.sum(aux)
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, max_len: int) -> PyTree:
+    ng, every = _groups(cfg)
+    d = ssm.dims(cfg)
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    C = transformer.cache_capacity(cfg, max_len)
+    hd = cfg.resolved_head_dim
+    return {
+        "h": jnp.zeros((ng, every, batch_size, d["n_heads"], d["N"], d["P"]),
+                       jnp.float32),
+        "conv": jnp.zeros((ng, every, batch_size, d["W"] - 1, d["conv_ch"]),
+                          dtype),
+        "k": jnp.zeros((ng, batch_size, C, cfg.n_kv, hd), dtype),
+        "v": jnp.zeros((ng, batch_size, C, cfg.n_kv, hd), dtype),
+        "slot_pos": jnp.full((batch_size, C), -1, jnp.int32),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params: PyTree, cfg: ArchConfig, batch: dict, max_len: int):
+    x = layers.maybe_shard(layers.embed(params["embed"], batch["tokens"]),
+                           "batch", None, None)
+    B, S = batch["tokens"].shape
+    positions = transformer.make_positions(cfg, B, S)
+    abs_pos = positions if positions.ndim == 2 else positions[0]
+    acfg = transformer.attn_config(cfg)
+    C = transformer.cache_capacity(cfg, max_len)
+    keep = min(C, S)
+    pad_path = C >= S            # no wrap: cache layout is a plain pad
+    slots = abs_pos[:, S - keep:] % C
+    bidx = jnp.arange(B)[:, None]
+    sp = params["shared"]
+
+    def _to_cache(t):
+        if pad_path:
+            return jnp.pad(t[:, S - keep:],
+                           ((0, 0), (0, C - keep), (0, 0), (0, 0)))
+        hd = cfg.resolved_head_dim
+        return jnp.zeros((B, C, cfg.n_kv, hd), t.dtype
+                         ).at[bidx, slots].set(t[:, S - keep:])
+
+    def group_body(x, gp):
+        def mamba_body(x, lp):
+            out, (h, conv) = ssm.block_forward(lp, cfg, x, return_state=True)
+            return out, (h, conv)
+
+        x, (hs, convs) = jax.lax.scan(mamba_body, x, gp)
+        h = layers.norm_apply(cfg.norm, sp["attn_norm"], x)
+        k, v = layers.project_kv(sp["attn"], acfg, h, positions)
+        x = x + layers.attention(sp["attn"], acfg, h, positions,
+                                 kv_override=(k, v), kv_positions=abs_pos)
+        h2 = layers.norm_apply(cfg.norm, sp["mlp_norm"], x)
+        x = x + layers.mlp(sp["mlp"], h2, cfg.mlp_kind)
+        return x, (hs, convs, _to_cache(k), _to_cache(v))
+
+    x, (hs, convs, cks, cvs) = jax.lax.scan(group_body, x, params["mamba"])
+    x = layers.rmsnorm(params["final_norm"], x)
+    logits = layers.linear(params["lm_head"], x[:, -1:, :])
+    if pad_path:
+        slot_pos = jnp.pad(abs_pos[:, S - keep:], ((0, 0), (0, C - keep)),
+                           constant_values=-1)
+    else:
+        slot_pos = jnp.full((B, C), -1, jnp.int32
+                            ).at[bidx, slots].set(abs_pos[:, S - keep:])
+    cache = {"h": hs, "conv": convs, "k": cks, "v": cvs,
+             "slot_pos": slot_pos, "length": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params: PyTree, cfg: ArchConfig, token: jax.Array,
+                cache: PyTree):
+    B = token.shape[0]
+    pos_scalar = cache["length"]
+    positions = transformer.make_positions(cfg, B, 1, offset=pos_scalar)
+    abs_pos = positions if positions.ndim == 2 else positions[0]
+    acfg = transformer.attn_config(cfg)
+    x = layers.maybe_shard(layers.embed(params["embed"], token),
+                           "batch", None, None)
+    C = cache["k"].shape[2]
+    slot = pos_scalar % C
+    slot_pos = cache["slot_pos"].at[:, slot].set(abs_pos[:, 0])
+    kv_valid = slot_pos >= 0
+    kv_positions = jnp.maximum(slot_pos, 0)
+    sp = params["shared"]
+
+    def group_body(x, scanned):
+        gp, h_g, conv_g, ck, cv = scanned
+
+        def mamba_body(x, inner):
+            lp, h, conv = inner
+            out, (h, conv) = ssm.block_decode(lp, cfg, x, h, conv)
+            return out, (h, conv)
+
+        x, (hs, convs) = jax.lax.scan(mamba_body, x, (gp, h_g, conv_g))
+        h = layers.norm_apply(cfg.norm, sp["attn_norm"], x)
+        k, v = layers.project_kv(sp["attn"], acfg, h, positions)
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, slot, 0, 0))
+        x = x + layers.attention(sp["attn"], acfg, h, positions,
+                                 kv_override=(ck, cv),
+                                 kv_positions=kv_positions,
+                                 kv_valid=kv_valid)
+        h2 = layers.norm_apply(cfg.norm, sp["mlp_norm"], x)
+        x = x + layers.mlp(sp["mlp"], h2, cfg.mlp_kind)
+        return x, (hs, convs, ck, cv)
+
+    x, (hs, convs, cks, cvs) = jax.lax.scan(
+        group_body, x,
+        (params["mamba"], cache["h"], cache["conv"], cache["k"], cache["v"]))
+    x = layers.rmsnorm(params["final_norm"], x)
+    logits = layers.linear(params["lm_head"], x)
+    return logits, {"h": hs, "conv": convs, "k": cks, "v": cvs,
+                    "slot_pos": slot_pos, "length": pos_scalar + 1}

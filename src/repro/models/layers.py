@@ -1,0 +1,386 @@
+"""Shared model layers: norms, rotary variants, GQA attention (with KV cache
+and sliding windows), and gated MLPs.  Pure-functional: params are plain
+dicts, every function is ``jit``/``scan``/``pjit`` friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def maybe_shard(x: jax.Array, *spec) -> jax.Array:
+    """Best-effort sharding constraint against the ambient mesh.
+
+    ``spec`` entries: axis name, tuple of names, None, or the sentinel
+    "batch" (resolved to ("pod","data") on the multi-pod mesh, ("data",) on
+    the single-pod mesh).  Outside a mesh context (unit tests) this is a
+    no-op.  Uneven dims are fine — GSPMD pads (llama's 24 heads on the
+    16-way model axis).
+    """
+    from jax.sharding import PartitionSpec as _P
+    candidates = []
+    for batch_axes in (("pod", "data"), "data", None):
+        resolved = tuple(batch_axes if s == "batch" else s for s in spec)
+        candidates.append(resolved)
+    candidates.append(tuple(None for _ in spec))
+    for cand in candidates:
+        try:
+            return jax.lax.with_sharding_constraint(x, _P(*cand))
+        except Exception:                                    # noqa: BLE001
+            continue
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> PyTree:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: PyTree, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * p["scale"].astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> PyTree:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: PyTree, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return out.astype(dt) * p["scale"].astype(dt) + p["bias"].astype(dt)
+
+
+def norm_init(kind: str, d: int, dtype=jnp.float32) -> PyTree:
+    return rmsnorm_init(d, dtype) if kind == "rms" else layernorm_init(d, dtype)
+
+
+def norm_apply(kind: str, p: PyTree, x: jax.Array) -> jax.Array:
+    return rmsnorm(p, x) if kind == "rms" else layernorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (1D, 2D-ChatGLM, 3D M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0,
+                     rotary_dim: Optional[int] = None) -> jax.Array:
+    rd = rotary_dim or head_dim
+    return 1.0 / (theta ** (jnp.arange(0, rd, 2, dtype=jnp.float32) / rd))
+
+
+def _rotate(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """Rotate pairs (even, odd) of the last dim by per-pair angles.
+
+    x: (..., rd) with rd even; angles: broadcastable (..., rd//2).
+    """
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+               rotary_frac: float = 1.0) -> jax.Array:
+    """Standard 1D RoPE.  x: (B, S, H, D); positions: (B, S) int.
+
+    ``rotary_frac < 1`` rotates only the leading fraction of head dims
+    (ChatGLM's 2D-RoPE rotates half and leaves half as NoPE-style passthrough
+    for the second positional channel; see apply_rope_2d).
+    """
+    D = x.shape[-1]
+    rd = int(D * rotary_frac)
+    rd -= rd % 2
+    freqs = rope_frequencies(D, theta, rd)                  # (rd/2,)
+    ang = positions[..., None, None].astype(jnp.float32) * freqs  # (B,S,1,rd/2)
+    rotated = _rotate(x[..., :rd].astype(jnp.float32), ang).astype(x.dtype)
+    return jnp.concatenate([rotated, x[..., rd:]], axis=-1) if rd < D else rotated
+
+
+def apply_rope_2d(x: jax.Array, positions: jax.Array,
+                  theta: float = 10000.0) -> jax.Array:
+    """ChatGLM-style 2D RoPE: the head dim is split in halves, each rotated
+    by its own positional channel.  positions: (2, B, S)."""
+    D = x.shape[-1]
+    half = D // 2
+    a = apply_rope(x[..., :half], positions[0], theta)
+    b = apply_rope(x[..., half:], positions[1], theta)
+    return jnp.concatenate([a, b], axis=-1)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, sections: tuple[int, ...],
+                theta: float = 10000.0) -> jax.Array:
+    """Qwen2-VL M-RoPE: rotary pairs are partitioned into (temporal, h, w)
+    sections, each driven by its own position id.  positions: (3, B, S);
+    ``sections`` are pair counts summing to D//2 (e.g. (16, 24, 24) for
+    D=128)."""
+    D = x.shape[-1]
+    assert sum(sections) == D // 2, (sections, D)
+    freqs = rope_frequencies(D, theta)                      # (D/2,)
+    # choose the position channel per frequency-pair index
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.array(sections), total_repeat_length=D // 2)
+    pos = positions[sec_id, :, :]                           # (D/2, B, S)
+    ang = jnp.einsum("dbs,d->bsd", pos.astype(jnp.float32), freqs)
+    return _rotate(x.astype(jnp.float32), ang[:, :, None, :]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear / embedding
+# ---------------------------------------------------------------------------
+
+def linear_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+                bias: bool = False) -> PyTree:
+    w = jax.random.normal(key, (d_in, d_out), dtype) / math.sqrt(d_in)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: PyTree, x: jax.Array) -> jax.Array:
+    out = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        out = out + p["b"].astype(x.dtype)
+    return out
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> PyTree:
+    return {"embedding": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(p: PyTree, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal / bidirectional / sliding window, KV cache)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    rope: str = "1d"                 # "1d" | "2d" | "mrope" | "none"
+    rope_theta: float = 10000.0
+    rope_frac: float = 1.0
+    mrope_sections: tuple[int, ...] = ()
+    window: int = 0                  # sliding window (0 = full)
+    causal: bool = True
+    qkv_bias: bool = False
+
+
+def attn_init(key, cfg: AttnConfig, dtype=jnp.float32) -> PyTree:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": linear_init(k1, cfg.d_model, cfg.n_heads * cfg.head_dim, dtype,
+                          bias=cfg.qkv_bias),
+        "wk": linear_init(k2, cfg.d_model, cfg.n_kv * cfg.head_dim, dtype,
+                          bias=cfg.qkv_bias),
+        "wv": linear_init(k3, cfg.d_model, cfg.n_kv * cfg.head_dim, dtype,
+                          bias=cfg.qkv_bias),
+        "wo": linear_init(k4, cfg.n_heads * cfg.head_dim, cfg.d_model, dtype),
+    }
+
+
+def _apply_positional(cfg: AttnConfig, x: jax.Array,
+                      positions: jax.Array) -> jax.Array:
+    if cfg.rope == "1d":
+        return apply_rope(x, positions, cfg.rope_theta, cfg.rope_frac)
+    if cfg.rope == "2d":
+        return apply_rope_2d(x, positions, cfg.rope_theta)
+    if cfg.rope == "mrope":
+        return apply_mrope(x, positions, cfg.mrope_sections, cfg.rope_theta)
+    return x
+
+
+def _mask_bias(cfg: AttnConfig, q_pos: jax.Array, kv_pos: jax.Array,
+               kv_valid: Optional[jax.Array] = None) -> jax.Array:
+    """(B?, Sq, Skv) additive mask from causality + window + cache validity.
+
+    q_pos: (B, Sq); kv_pos: (B, Skv) absolute positions.
+    """
+    q = q_pos[:, :, None]
+    k = kv_pos[:, None, :]
+    ok = jnp.ones(q.shape[:1] + (q.shape[1], k.shape[2]), bool)
+    if cfg.causal:
+        ok &= k <= q
+    if cfg.window:
+        ok &= k > q - cfg.window
+    if kv_valid is not None:
+        ok &= kv_valid[:, None, :]
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+ATTN_CHUNK = 1024     # query-chunk length for memory-efficient attention
+
+
+def _attend_block(cfg: AttnConfig, q: jax.Array, k: jax.Array, v: jax.Array,
+                  bias: jax.Array) -> jax.Array:
+    """One (q-chunk x kv) attention block.  q: (B,Sq,H,D); k/v: (B,Skv,H,D)
+    (kv already expanded to full heads); bias: (B,Sq,Skv) additive."""
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32)
+    scores *= 1.0 / math.sqrt(cfg.head_dim)
+    scores = maybe_shard(scores, "batch", "model", None, None)
+    probs = jax.nn.softmax(scores + bias[:, None], axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _attend_decode(cfg: AttnConfig, q: jax.Array, k: jax.Array,
+                   v: jax.Array, bias: jax.Array) -> jax.Array:
+    """Short-query (decode) attention: grouped GQA einsum against the cache
+    in its NATIVE layout — no kv repeat, no sharding constraint.  The
+    head_dim contraction over the model-sharded cache becomes partial
+    scores + a tiny all-reduce; forcing head-sharded scores here would make
+    GSPMD rematerialize the whole cache (EXPERIMENTS.md §Perf, arctic)."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    qg = q.reshape(B, Sq, KV, H // KV, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores *= 1.0 / math.sqrt(D)
+    probs = jax.nn.softmax(scores + bias[:, None, None], axis=-1
+                           ).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(B, Sq, H * D)
+
+
+def _attend(cfg: AttnConfig, q: jax.Array, k: jax.Array, v: jax.Array,
+            q_abs: Optional[jax.Array], kv_abs: Optional[jax.Array],
+            kv_valid: Optional[jax.Array], masked: bool,
+            chunk: int = ATTN_CHUNK) -> jax.Array:
+    """Chunked GQA attention core: queries processed in chunks so the score
+    tensor never exceeds (B, H, chunk, Skv); causal chunks also truncate the
+    KV span they can see (halves the quadratic work)."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    if Sq <= 8 and Skv > Sq:      # decode against a cache
+        if masked:
+            bias = _mask_bias(cfg, q_abs, kv_abs, kv_valid)
+        elif kv_valid is not None:
+            bias = jnp.where(kv_valid[:, None, :], 0.0, -1e30)
+        else:
+            bias = jnp.zeros((B, Sq, Skv), jnp.float32)
+        return _attend_decode(cfg, q, k, v, bias)
+    groups = cfg.n_heads // cfg.n_kv
+    if groups > 1:
+        k = jnp.repeat(k, groups, axis=2)
+        v = jnp.repeat(v, groups, axis=2)
+
+    def bias_for(q_abs_c, lo, hi, qlen):
+        if not masked:
+            if kv_valid is not None:
+                return jnp.where(kv_valid[:, None, lo:hi], 0.0, -1e30)
+            return jnp.zeros((B, qlen, hi - lo), jnp.float32)
+        kvv = kv_valid[:, lo:hi] if kv_valid is not None else None
+        return _mask_bias(cfg, q_abs_c, kv_abs[:, lo:hi], kvv)
+
+    if Sq <= chunk:
+        out = _attend_block(cfg, q, k, v, bias_for(q_abs, 0, Skv, Sq))
+    else:
+        assert Sq % chunk == 0, (Sq, chunk)
+        outs = []
+        causal_trunc = (masked and cfg.causal and kv_abs is not None
+                        and Sq == Skv)
+        for i in range(Sq // chunk):
+            qc = q[:, i * chunk:(i + 1) * chunk]
+            qa = (q_abs[:, i * chunk:(i + 1) * chunk]
+                  if q_abs is not None else None)
+            lo = 0
+            hi = (i + 1) * chunk if causal_trunc else Skv
+            if causal_trunc and cfg.window:
+                lo = max(0, (i + 1) * chunk - cfg.window - chunk)
+            outs.append(_attend_block(cfg, qc, k[:, lo:hi], v[:, lo:hi],
+                                      bias_for(qa, lo, hi, chunk)))
+        out = jnp.concatenate(outs, axis=1)
+    return out.reshape(B, Sq, H * D)
+
+
+def attention(p: PyTree, cfg: AttnConfig, x: jax.Array,
+              positions: jax.Array,
+              kv_override: Optional[tuple[jax.Array, jax.Array]] = None,
+              kv_positions: Optional[jax.Array] = None,
+              kv_valid: Optional[jax.Array] = None,
+              cross_kv: Optional[jax.Array] = None) -> jax.Array:
+    """General GQA attention.
+
+    x: (B, Sq, d); positions: (B, Sq) (or (2/3, B, Sq) for 2d/mrope).
+    kv_override: precomputed (k, v) each (B, Skv, n_kv, hd) — decode cache or
+    cross-attention memory.  kv_positions/(B, Skv) and kv_valid mask apply.
+    cross_kv: (B, Skv, d) source sequence for cross-attention (k/v projected
+    from it, no positional rotation).
+    """
+    B, Sq, _ = x.shape
+    q = linear(p["wq"], x).reshape(B, Sq, cfg.n_heads, cfg.head_dim)
+    q = _apply_positional(cfg, q, positions)
+
+    if kv_override is not None:
+        k, v = kv_override
+    elif cross_kv is not None:
+        Skv = cross_kv.shape[1]
+        k = linear(p["wk"], cross_kv).reshape(B, Skv, cfg.n_kv, cfg.head_dim)
+        v = linear(p["wv"], cross_kv).reshape(B, Skv, cfg.n_kv, cfg.head_dim)
+    else:
+        k = linear(p["wk"], x).reshape(B, Sq, cfg.n_kv, cfg.head_dim)
+        v = linear(p["wv"], x).reshape(B, Sq, cfg.n_kv, cfg.head_dim)
+        k = _apply_positional(cfg, k, positions)
+
+    if cross_kv is not None:
+        out = _attend(cfg, q, k, v, None, None, kv_valid, masked=False)
+    else:
+        q_abs = positions if positions.ndim == 2 else positions[0]
+        kv_abs = kv_positions if kv_positions is not None else (
+            q_abs if kv_override is None else None)
+        assert kv_abs is not None, "kv_positions required with kv_override"
+        out = _attend(cfg, q, k, v, q_abs, kv_abs, kv_valid, masked=True)
+    return linear(p["wo"], out)
+
+
+def project_kv(p: PyTree, cfg: AttnConfig, x: jax.Array,
+               positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """K/V projection for cache fill.  x: (B, S, d) -> (B, S, n_kv, hd)."""
+    B, S, _ = x.shape
+    k = linear(p["wk"], x).reshape(B, S, cfg.n_kv, cfg.head_dim)
+    v = linear(p["wv"], x).reshape(B, S, cfg.n_kv, cfg.head_dim)
+    k = _apply_positional(cfg, k, positions)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str = "swiglu",
+             dtype=jnp.float32) -> PyTree:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {"w_gate": linear_init(k1, d_model, d_ff, dtype),
+                "w_up": linear_init(k2, d_model, d_ff, dtype),
+                "w_down": linear_init(k3, d_ff, d_model, dtype)}
+    return {"w_up": linear_init(k1, d_model, d_ff, dtype),
+            "w_down": linear_init(k2, d_ff, d_model, dtype)}
+
+
+def mlp(p: PyTree, x: jax.Array, kind: str = "swiglu") -> jax.Array:
+    if kind == "swiglu":
+        return linear(p["w_down"],
+                      jax.nn.silu(linear(p["w_gate"], x)) * linear(p["w_up"], x))
+    return linear(p["w_down"], jax.nn.gelu(linear(p["w_up"], x)))

@@ -1,0 +1,208 @@
+"""Mixture-of-Experts FFN (GShard-style top-k token-choice with capacity).
+
+Used by mixtral-8x7b (8e top-2) and arctic-480b (128e top-2 + dense
+residual).  The dispatch/combine tensors are built per *group* (the token
+axis is processed in groups of ``group_size``) so the (S, E, C) one-hots stay
+VMEM-friendly; groups are scanned to bound live memory.
+
+Sharding: the expert axis E shards over "model" when E % mesh_model == 0
+(arctic); otherwise the expert-internal d_ff dimension shards (mixtral,
+8 experts on a 16-way axis) — see distributed/sharding.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models import layers
+
+PyTree = Any
+
+
+def moe_init(key, d_model: int, d_ff: int, cfg: MoEConfig,
+             dtype=jnp.float32) -> PyTree:
+    ks = jax.random.split(key, 5)
+    E = cfg.num_experts
+    scale_in = 1.0 / jnp.sqrt(d_model)
+    scale_out = 1.0 / jnp.sqrt(d_ff)
+    p = {
+        "router": layers.linear_init(ks[0], d_model, E, dtype),
+        "w_gate": jax.random.normal(ks[1], (E, d_model, d_ff), dtype) * scale_in,
+        "w_up": jax.random.normal(ks[2], (E, d_model, d_ff), dtype) * scale_in,
+        "w_down": jax.random.normal(ks[3], (E, d_ff, d_model), dtype) * scale_out,
+    }
+    if cfg.dense_residual:
+        p["dense"] = layers.mlp_init(ks[4], d_model,
+                                     cfg.dense_d_ff or d_ff, "swiglu", dtype)
+    return p
+
+
+def _topk_dispatch(router_probs: jax.Array, top_k: int, capacity: int):
+    """Token-choice top-k with per-expert capacity.
+
+    router_probs: (S, E).  Returns dispatch (S, E, C) in {0,1} as dtype,
+    combine (S, E, C) weights, and the load-balancing aux loss.
+    """
+    S, E = router_probs.shape
+    probs = router_probs
+    dispatch_parts, combine_parts = [], []
+    # running per-expert fill for capacity bookkeeping across the k passes
+    fill_base = jnp.zeros((E,), jnp.int32)
+    masked = probs
+    for _ in range(top_k):
+        idx = jnp.argmax(masked, axis=-1)                     # (S,)
+        onehot = jax.nn.one_hot(idx, E, dtype=probs.dtype)    # (S, E)
+        gate = jnp.sum(probs * onehot, axis=-1)               # (S,)
+        # position of each token within its chosen expert's queue
+        pos = jnp.cumsum(onehot, axis=0) - onehot + fill_base[None, :]
+        pos_tok = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)  # (S,)
+        keep = pos_tok < capacity
+        slot = jax.nn.one_hot(pos_tok, capacity, dtype=probs.dtype)  # (S, C)
+        disp = onehot[:, :, None] * slot[:, None, :] * keep[:, None, None]
+        dispatch_parts.append(disp)
+        combine_parts.append(disp * gate[:, None, None])
+        fill_base = fill_base + jnp.sum(onehot, axis=0).astype(jnp.int32)
+        masked = jnp.where(onehot > 0, -jnp.inf, masked)
+    dispatch = sum(dispatch_parts)
+    combine = sum(combine_parts)
+    # Switch-style load-balance loss over the top-1 assignment
+    density = jnp.mean(dispatch_parts[0].sum(-1), axis=0)     # (E,)
+    density_proxy = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_proxy) * (E ** 2) / max(S, 1)
+    return dispatch, combine, aux
+
+
+def _topk_routing(probs: jax.Array, top_k: int, capacity: int):
+    """Shared routing bookkeeping: expert choice, gate, slot position per
+    (token, k) assignment.  All O(S*E) — no (S,E,C) tensor.
+
+    Returns expert_idx (S,k), gates (S,k), pos_in_expert (S,k), keep (S,k),
+    aux loss.
+    """
+    S, E = probs.shape
+    masked = probs
+    experts, gates, positions = [], [], []
+    fill = jnp.zeros((E,), jnp.int32)
+    top1_onehot = None
+    for _ in range(top_k):
+        idx = jnp.argmax(masked, axis=-1)                     # (S,)
+        onehot = jax.nn.one_hot(idx, E, dtype=probs.dtype)
+        if top1_onehot is None:
+            top1_onehot = onehot
+        gate = jnp.sum(probs * onehot, axis=-1)
+        pos = jnp.cumsum(onehot, axis=0) - onehot + fill[None, :]
+        pos_tok = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)
+        experts.append(idx)
+        gates.append(gate)
+        positions.append(pos_tok)
+        fill = fill + jnp.sum(onehot, axis=0).astype(jnp.int32)
+        masked = jnp.where(onehot > 0, -jnp.inf, masked)
+    expert_idx = jnp.stack(experts, 1)
+    gates_k = jnp.stack(gates, 1)
+    pos_k = jnp.stack(positions, 1)
+    keep = pos_k < capacity
+    density = jnp.mean(top1_onehot, axis=0)
+    density_proxy = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_proxy) * E
+    return expert_idx, gates_k, pos_k, keep, aux
+
+
+def _expert_ffn(p: PyTree, xin: jax.Array) -> jax.Array:
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, p["w_gate"]))
+         * jnp.einsum("ecd,edf->ecf", xin, p["w_up"]))
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])          # (E, C, d)
+
+
+def _group_einsum(p: PyTree, cfg: MoEConfig, xg: jax.Array, capacity: int):
+    """GShard-faithful one-hot dispatch (baseline; see MoEConfig.dispatch)."""
+    logits = layers.linear(p["router"], xg).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1).astype(xg.dtype)
+    dispatch, combine, aux = _topk_dispatch(probs, cfg.top_k, capacity)
+    xin = jnp.einsum("sd,sec->ecd", xg, dispatch)              # (E, C, d)
+    y = _expert_ffn(p, xin)
+    out = jnp.einsum("ecd,sec->sd", y, combine)
+    return out, aux
+
+
+def _group_gather(p: PyTree, cfg: MoEConfig, xg: jax.Array, capacity: int):
+    """Gather-based dispatch (optimized): tokens land in expert slots via a
+    scatter of row indices + one gather; combine is a per-assignment gather
+    + weighted sum.  Removes the 2*S*E*C*d dispatch/combine matmul FLOPs
+    and the (S,E,C) one-hot bytes of the einsum path."""
+    S, d = xg.shape
+    E, C = cfg.num_experts, capacity
+    logits = layers.linear(p["router"], xg).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1).astype(xg.dtype)
+    expert_idx, gates, pos, keep, aux = _topk_routing(probs, cfg.top_k, C)
+    # slot id per assignment; dropped tokens land in a trash slot E*C
+    slot = jnp.where(keep, expert_idx * C + pos, E * C)        # (S, k)
+    # token row feeding each slot (slots are filled by <=1 token)
+    token_for_slot = jnp.full((E * C + 1,), S, jnp.int32)
+    token_for_slot = token_for_slot.at[slot.reshape(-1)].set(
+        jnp.repeat(jnp.arange(S, dtype=jnp.int32), cfg.top_k), mode="drop")
+    xg_pad = jnp.concatenate([xg, jnp.zeros((1, d), xg.dtype)], 0)
+    xin = xg_pad[token_for_slot[:-1]].reshape(E, C, d)         # gather
+    y = _expert_ffn(p, xin)                                    # (E, C, d)
+    y_flat = jnp.concatenate([y.reshape(E * C, d),
+                              jnp.zeros((1, d), y.dtype)], 0)
+    picked = y_flat[slot]                                      # (S, k, d)
+    out = jnp.sum(picked * gates[..., None].astype(y.dtype), axis=1)
+    return out, aux
+
+
+def moe_apply(p: PyTree, cfg: MoEConfig, x: jax.Array,
+              group_size: int = 4096,
+              group_mode: str = "scan") -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    Tokens are flattened and processed in groups (scan) so per-group routing
+    state stays small; the dispatch flavour is cfg.dispatch.
+    """
+    B, S, d = x.shape
+    tokens = x.reshape(B * S, d)
+    T = tokens.shape[0]
+    g = min(group_size, T)
+    n_groups = -(-T // g)
+    pad = n_groups * g - T
+    if pad:
+        tokens = jnp.concatenate(
+            [tokens, jnp.zeros((pad, d), tokens.dtype)], axis=0)
+    groups = tokens.reshape(n_groups, g, d)
+    capacity = max(int(cfg.top_k * g / cfg.num_experts * cfg.capacity_factor),
+                   1)
+    group_fn = _group_gather if cfg.dispatch == "gather" else _group_einsum
+
+    if group_mode == "vmap":
+        # vmap over groups: the group dim is batch-aligned, so it stays
+        # sharded over (pod, data) and every group's routing is shard-LOCAL
+        # (a scan dynamic-slices the sharded token axis and pays
+        # cross-shard gathers per iteration).  Used in TRAINING, where the
+        # per-layer remat bounds the live group buffers; serving keeps the
+        # scan (all groups at once costs ~32 GB at prefill_32k) —
+        # EXPERIMENTS.md §Perf, mixtral group-mode iteration.
+        outs, auxs = jax.vmap(lambda xg: group_fn(p, cfg, xg, capacity))(groups)
+        aux_total = jnp.sum(auxs)
+    else:
+        def one_group(carry, xg):
+            out, aux = group_fn(p, cfg, xg, capacity)
+            return carry + aux, out
+
+        aux_total, outs = jax.lax.scan(one_group, jnp.zeros((), jnp.float32),
+                                       groups)
+    out = outs.reshape(n_groups * g, d)[:T].reshape(B, S, d)
+    if cfg.dense_residual:
+        out = out + layers.mlp(p["dense"], x, "swiglu")
+    return out, aux_total / n_groups
+
+
+def expert_activation_stats(p: PyTree, cfg: MoEConfig,
+                            x: jax.Array) -> jax.Array:
+    """Per-expert activation frequency — the MoE analogue of the paper's
+    Fig.-1 layerwise firing analysis (DESIGN.md §4)."""
+    logits = layers.linear(p["router"], x.reshape(-1, x.shape[-1]))
+    top1 = jnp.argmax(logits, axis=-1)
+    return jnp.bincount(top1, length=cfg.num_experts) / top1.shape[0]

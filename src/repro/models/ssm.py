@@ -1,0 +1,292 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+The training/prefill path uses the chunked matmul form of SSD (quadratic
+inside a chunk, linear across chunks) — MXU-friendly: the inner products
+``C B^T`` and the decay-masked chunk matmul map onto 128x128 dots.  The
+decode path is the O(1)-per-token recurrence on the (H, N, P) state.
+
+Block layout follows the reference implementation: one fused in_proj to
+(z, x, B, C, dt), a width-4 causal conv over the (x, B, C) channels, scalar
+per-head A, gated RMSNorm, out_proj.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models import layers
+
+PyTree = Any
+
+
+def dims(cfg: ArchConfig) -> dict:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.state_dim          # x + B + C channels (G=1)
+    return dict(d_inner=d_inner, n_heads=n_heads, conv_ch=conv_ch,
+                N=s.state_dim, P=s.head_dim, W=s.conv_width, Q=s.chunk)
+
+
+def init_block(key, cfg: ArchConfig, dtype) -> PyTree:
+    d = dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    in_dim = 2 * d["d_inner"] + 2 * d["N"] + d["n_heads"]
+    return {
+        "norm": layers.rmsnorm_init(cfg.d_model, dtype),
+        "in_proj": layers.linear_init(k1, cfg.d_model, in_dim, dtype),
+        "conv_w": jax.random.normal(k2, (d["W"], d["conv_ch"]), dtype) * 0.2,
+        "conv_b": jnp.zeros((d["conv_ch"],), dtype),
+        "A_log": jnp.zeros((d["n_heads"],), jnp.float32),
+        "dt_bias": jnp.full((d["n_heads"],), -2.0, jnp.float32),
+        "D": jnp.ones((d["n_heads"],), jnp.float32),
+        "gate_norm": layers.rmsnorm_init(d["d_inner"], dtype),
+        "out_proj": layers.linear_init(k3, d["d_inner"], cfg.d_model, dtype),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: jax.Array):
+    d = dims(cfg)
+    di, N, H = d["d_inner"], d["N"], d["n_heads"]
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * N]
+    dt = zxbcdt[..., di + di + 2 * N:]
+    assert dt.shape[-1] == H
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Width-W causal depthwise conv over (B, S, C) channels."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                h0: jax.Array | None = None):
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P)   per-head inputs
+    dt: (B, S, H)      softplus'd step sizes
+    A:  (H,)           negative decay rates (a = exp(A*dt))
+    Bm: (B, S, N)      input projections (shared across heads, G=1)
+    Cm: (B, S, N)      output projections
+    Returns y (B, S, H, P) and final state (B, H, N, P).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        # dt=0 padding is exact: decay exp(A*0)=1 keeps the state, the
+        # update term is dt-scaled so it vanishes
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    S_pad = S + pad
+    nc = S_pad // Q
+
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    # log-decay within chunk: la[..., i] = sum_{j<=i} A*dt_j   (B,nc,Q,H)
+    la = jnp.cumsum(A[None, None, None, :] * dtc, axis=2)
+    seg = la[:, :, :, None, :] - la[:, :, None, :, :]        # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    # the (B,nc,Q,Q,H) intermediates dominate SSD memory — keep them sharded
+    # over heads on the model axis (48/80 heads are 16-divisible)
+    decay = layers.maybe_shard(decay, "batch", None, None, None, "model")
+
+    # intra-chunk (quadratic, matmul-rich): scores = (C_i . B_j)
+    g = jnp.einsum("bcin,bcjn->bcij", Cc, Bc,
+                   preferred_element_type=jnp.float32)       # (B,nc,Q,Q)
+    m = g[..., None] * decay * dtc[:, :, None, :, :]         # (B,nc,Q,Q,H)
+    m = layers.maybe_shard(m, "batch", None, None, None, "model")
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m.astype(x.dtype), xc)
+
+    # chunk summaries: S_c = sum_j exp(la_Q - la_j) dt_j B_j x_j  (B,nc,H,N,P)
+    tail = jnp.exp(la[:, :, -1:, :] - la) * dtc              # (B,nc,Q,H)
+    states = jnp.einsum("bcqh,bcqn,bcqhp->bchnp", tail.astype(x.dtype), Bc, xc)
+    chunk_decay = jnp.exp(la[:, :, -1, :])                   # (B,nc,H)
+
+    # inter-chunk recurrence over nc chunks
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+
+    def scan_fn(h, inp):
+        s_c, dec = inp                                       # (B,H,N,P), (B,H)
+        h_prev = h
+        h = h * dec[:, :, None, None] + s_c.astype(jnp.float32)
+        return h, h_prev
+
+    (h_final, h_prevs) = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                    # (B,nc,H,N,P)
+
+    # inter-chunk contribution: y_inter_i = C_i . (exp(la_i) * h_{c-1})
+    inter_decay = jnp.exp(la)                                # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", Cc,
+                         inter_decay.astype(x.dtype),
+                         h_prevs.astype(x.dtype))
+    y = (y_intra + y_inter).reshape(Bsz, S_pad, H, P)[:, :S]
+    return y, h_final
+
+
+def block_forward(lp: PyTree, cfg: ArchConfig, x_in: jax.Array,
+                  h0: jax.Array | None = None,
+                  return_state: bool = False):
+    """One Mamba2 block (residual included).  x_in: (B, S, D)."""
+    d = dims(cfg)
+    h = layers.rmsnorm(lp["norm"], x_in)
+    zxbcdt = layers.linear(lp["in_proj"], h)
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC, lp["conv_w"], lp["conv_b"])
+    xm = xBC[..., :d["d_inner"]]
+    Bm = xBC[..., d["d_inner"]:d["d_inner"] + d["N"]]
+    Cm = xBC[..., d["d_inner"] + d["N"]:]
+    Bsz, S, _ = xm.shape
+    xh = xm.reshape(Bsz, S, d["n_heads"], d["P"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + lp["dt_bias"]).astype(x_in.dtype)
+    A = -jnp.exp(lp["A_log"])
+    y, h_final = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm.chunk, h0)
+    y = y + xh * lp["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, S, d["d_inner"])
+    y = layers.rmsnorm(lp["gate_norm"], y * jax.nn.silu(z))
+    out = x_in + layers.linear(lp["out_proj"], y)
+    if return_state:
+        conv_state = jnp.concatenate(
+            [jnp.zeros((Bsz, max(d["W"] - 1 - S, 0), d["conv_ch"]),
+                       zxbcdt.dtype),
+             _pre_conv(lp, cfg, h)[:, -(d["W"] - 1):, :]], axis=1)
+        return out, (h_final, conv_state)
+    return out
+
+
+def _pre_conv(lp: PyTree, cfg: ArchConfig, h_normed: jax.Array) -> jax.Array:
+    """Raw (pre-conv) xBC channels — what the decode conv state stores."""
+    zxbcdt = layers.linear(lp["in_proj"], h_normed)
+    _, xBC, _ = _split_proj(cfg, zxbcdt)
+    return xBC
+
+
+def block_decode(lp: PyTree, cfg: ArchConfig, x_in: jax.Array,
+                 h: jax.Array, conv_state: jax.Array):
+    """One-token recurrence.  x_in: (B, 1, D); h: (B, H, N, P);
+    conv_state: (B, W-1, conv_ch) raw xBC history."""
+    d = dims(cfg)
+    hn = layers.rmsnorm(lp["norm"], x_in)
+    zxbcdt = layers.linear(lp["in_proj"], hn)
+    z, xBC_new, dt_raw = _split_proj(cfg, zxbcdt)
+    window = jnp.concatenate([conv_state, xBC_new], axis=1)  # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", window, lp["conv_w"]) + lp["conv_b"]
+    xBC = jax.nn.silu(conv_out)[:, None, :]
+    xm = xBC[..., :d["d_inner"]]
+    Bm = xBC[..., d["d_inner"]:d["d_inner"] + d["N"]][:, 0]  # (B, N)
+    Cm = xBC[..., d["d_inner"] + d["N"]:][:, 0]
+    Bsz = xm.shape[0]
+    xh = xm.reshape(Bsz, d["n_heads"], d["P"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"])[:, 0]
+    A = -jnp.exp(lp["A_log"])
+    a = jnp.exp(A[None, :] * dt)                             # (B, H)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt.astype(xh.dtype), Bm, xh)
+    h = h * a[:, :, None, None] + upd.astype(jnp.float32)
+    y = jnp.einsum("bn,bhnp->bhp", Cm, h.astype(xh.dtype))
+    y = y + xh * lp["D"].astype(y.dtype)[None, :, None]
+    y = y.reshape(Bsz, 1, d["d_inner"])
+    y = layers.rmsnorm(lp["gate_norm"], y * jax.nn.silu(z))
+    out = x_in + layers.linear(lp["out_proj"], y)
+    return out, (h, window[:, 1:, :])
+
+
+# ---------------------------------------------------------------------------
+# Full model (mamba2-780m): stacked blocks + embedding/unembed
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ArchConfig) -> PyTree:
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    lkeys = jax.random.split(k_layers, cfg.num_layers)
+    stacked = jax.vmap(lambda k: init_block(k, cfg, dtype))(lkeys)
+    return {
+        "embed": layers.embed_init(k_embed, cfg.vocab_padded, cfg.d_model,
+                                   dtype),
+        "layers": stacked,
+        "final_norm": layers.rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": layers.linear_init(k_head, cfg.d_model, cfg.vocab_padded,
+                                      dtype),
+    }
+
+
+def forward(params: PyTree, cfg: ArchConfig, batch: dict,
+            remat: bool = False):
+    x = layers.maybe_shard(layers.embed(params["embed"], batch["tokens"]),
+                           "batch", None, None)
+
+    def body(x, lp):
+        return block_forward(lp, cfg, x), jnp.zeros((), jnp.float32)
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, aux = jax.lax.scan(body, x, params["layers"])
+    x = layers.rmsnorm(params["final_norm"], x)
+    return layers.linear(params["lm_head"], x), jnp.sum(aux)
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, max_len: int) -> PyTree:
+    del max_len                                      # state is O(1) in seq
+    d = dims(cfg)
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    L = cfg.num_layers
+    return {
+        "h": jnp.zeros((L, batch_size, d["n_heads"], d["N"], d["P"]),
+                       jnp.float32),
+        "conv": jnp.zeros((L, batch_size, d["W"] - 1, d["conv_ch"]), dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params: PyTree, cfg: ArchConfig, batch: dict, max_len: int):
+    x = layers.maybe_shard(layers.embed(params["embed"], batch["tokens"]),
+                           "batch", None, None)
+    S = x.shape[1]
+
+    def body(x, lp):
+        out, (h, conv) = block_forward(lp, cfg, x, return_state=True)
+        return out, (h, conv)
+
+    x, (hs, convs) = jax.lax.scan(body, x, params["layers"])
+    x = layers.rmsnorm(params["final_norm"], x)
+    logits = layers.linear(params["lm_head"], x[:, -1:, :])
+    cache = {"h": hs, "conv": convs,
+             "length": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params: PyTree, cfg: ArchConfig, token: jax.Array,
+                cache: PyTree):
+    x = layers.maybe_shard(layers.embed(params["embed"], token),
+                           "batch", None, None)
+
+    def body(x, scanned):
+        lp, h, conv = scanned
+        out, (h, conv) = block_decode(lp, cfg, x, h, conv)
+        return out, (h, conv)
+
+    x, (hs, convs) = jax.lax.scan(
+        body, x, (params["layers"], cache["h"], cache["conv"]))
+    x = layers.rmsnorm(params["final_norm"], x)
+    logits = layers.linear(params["lm_head"], x)
+    return logits, {"h": hs, "conv": convs, "length": cache["length"] + 1}

@@ -1,0 +1,286 @@
+"""Decoder-only transformer family (llama3.2, granite, tinyllama, chatglm3,
+qwen2-vl backbone, mixtral w/ MoE + sliding window).
+
+Layers are *stacked* (every layer-param leaf carries a leading ``L`` dim) and
+driven by ``lax.scan`` — one compiled layer body regardless of depth, which
+keeps dry-run lowering/compile times sane at 80 layers and makes the remat
+policy a single ``jax.checkpoint`` around the scanned body.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers, moe as moe_lib
+
+PyTree = Any
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def attn_config(cfg: ArchConfig) -> layers.AttnConfig:
+    return layers.AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        head_dim=cfg.resolved_head_dim, rope=cfg.rope,
+        rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
+        window=cfg.window, causal=True)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ArchConfig, dtype) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": layers.norm_init(cfg.norm, cfg.d_model, dtype),
+        "attn": layers.attn_init(k1, attn_config(cfg), dtype),
+        "mlp_norm": layers.norm_init(cfg.norm, cfg.d_model, dtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_lib.moe_init(k2, cfg.d_model, cfg.d_ff, cfg.moe, dtype)
+    else:
+        p["mlp"] = layers.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_kind,
+                                   dtype)
+    return p
+
+
+def init_params(key, cfg: ArchConfig) -> PyTree:
+    dtype = _dtype(cfg)
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg, dtype))(layer_keys)
+    params = {
+        "embed": layers.embed_init(k_embed, cfg.vocab_padded, cfg.d_model,
+                                   dtype),
+        "layers": stacked,
+        "final_norm": layers.norm_init(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.linear_init(k_head, cfg.d_model,
+                                               cfg.vocab_padded, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+
+def make_positions(cfg: ArchConfig, B: int, S: int,
+                   offset: jax.Array | int = 0) -> jax.Array:
+    """Default position ids per rope flavour (explicit ids may override —
+    qwen2-vl's M-RoPE ids come from the batch)."""
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (B, S))
+    if cfg.rope == "2d":
+        return jnp.stack([pos, pos])
+    if cfg.rope == "mrope":
+        return jnp.stack([pos, pos, pos])
+    return pos
+
+
+def _abs_positions(positions: jax.Array) -> jax.Array:
+    return positions if positions.ndim == 2 else positions[0]
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(cfg: ArchConfig, acfg: layers.AttnConfig, lp: PyTree,
+               x: jax.Array, positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    h = layers.norm_apply(cfg.norm, lp["attn_norm"], x)
+    x = x + layers.attention(lp["attn"], acfg, h, positions)
+    h = layers.norm_apply(cfg.norm, lp["mlp_norm"], x)
+    if cfg.moe is not None:
+        # vmap group mode: training only (remat bounds live group buffers;
+        # see moe_apply)
+        out, aux = moe_lib.moe_apply(lp["moe"], cfg.moe, h,
+                                     group_mode="vmap")
+    else:
+        out, aux = layers.mlp(lp["mlp"], h, cfg.mlp_kind), jnp.zeros((), jnp.float32)
+    return x + out, aux
+
+
+def embed_inputs(params: PyTree, cfg: ArchConfig, batch: dict) -> jax.Array:
+    """Token embedding + modality-frontend merge (vision stub: precomputed
+    patch embeddings overwrite the leading positions)."""
+    x = layers.embed(params["embed"], batch["tokens"])
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype)
+        x = jax.lax.dynamic_update_slice(x, pe, (0, 0, 0))
+    # pin the residual stream to the canonical activation layout (batch
+    # sharded, d replicated) — a d-sharded embedding otherwise leaks model-
+    # sharding into every layer (EXPERIMENTS.md §Perf, qwen iteration 3)
+    return layers.maybe_shard(x, "batch", None, None)
+
+
+def forward(params: PyTree, cfg: ArchConfig, batch: dict,
+            remat: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (logits, aux_loss)."""
+    x = embed_inputs(params, cfg, batch)
+    B, S = batch["tokens"].shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = make_positions(cfg, B, S)
+    acfg = attn_config(cfg)
+
+    def body(x, lp):
+        out, aux = _layer_fwd(cfg, acfg, lp, x, positions)
+        return out, aux
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, aux = jax.lax.scan(body, x, params["layers"])
+    x = layers.norm_apply(cfg.norm, params["final_norm"], x)
+    logits = unembed(params, cfg, x)
+    return logits, jnp.sum(aux)
+
+
+def unembed(params: PyTree, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return x @ params["embed"]["embedding"].T.astype(x.dtype)
+    return layers.linear(params["lm_head"], x)
+
+
+# ---------------------------------------------------------------------------
+# KV cache serving
+# ---------------------------------------------------------------------------
+
+def cache_capacity(cfg: ArchConfig, max_len: int) -> int:
+    """Rolling-buffer capacity: windowed archs cap the cache at the window
+    (what a production server does for SWA models)."""
+    return min(max_len, cfg.window) if cfg.window else max_len
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, max_len: int) -> PyTree:
+    dtype = _dtype(cfg)
+    C = cache_capacity(cfg, max_len)
+    hd = cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch_size, C, cfg.n_kv, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        # absolute position stored in each slot (-1 = empty)
+        "slot_pos": jnp.full((batch_size, C), -1, jnp.int32),
+        "length": jnp.zeros((), jnp.int32),    # tokens seen so far
+    }
+
+
+def prefill(params: PyTree, cfg: ArchConfig, batch: dict,
+            max_len: int) -> tuple[jax.Array, PyTree]:
+    """Run the full prompt, build the cache, return last-token logits."""
+    x = embed_inputs(params, cfg, batch)
+    B, S = batch["tokens"].shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = make_positions(cfg, B, S)
+    acfg = attn_config(cfg)
+    C = cache_capacity(cfg, max_len)
+    abs_pos = _abs_positions(positions)
+
+    def body(x, lp):
+        h = layers.norm_apply(cfg.norm, lp["attn_norm"], x)
+        k, v = layers.project_kv(lp["attn"], acfg, h, positions)
+        x = x + layers.attention(lp["attn"], acfg, h, positions,
+                                 kv_override=(k, v), kv_positions=abs_pos)
+        h2 = layers.norm_apply(cfg.norm, lp["mlp_norm"], x)
+        if cfg.moe is not None:
+            out, _ = moe_lib.moe_apply(lp["moe"], cfg.moe, h2)
+        else:
+            out = layers.mlp(lp["mlp"], h2, cfg.mlp_kind)
+        # cache entries leave the scan in their final split-KV layout
+        # (seq on "model") — otherwise the stacked ys materialize
+        # replicated inside the loop (EXPERIMENTS.md §Perf, qwen iter 4)
+        k = layers.maybe_shard(k, "batch", "model", None, None)
+        v = layers.maybe_shard(v, "batch", "model", None, None)
+        return x + out, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = layers.norm_apply(cfg.norm, params["final_norm"], x)
+    logits = unembed(params, cfg, x[:, -1:, :])
+
+    # Build the cache from the last C tokens only: their absolute positions
+    # map to C *distinct* rolling slots (consecutive ints mod C), so the
+    # scatter has no duplicate indices and the newest data always survives.
+    # Fast path: standard prefill (positions = 0..S-1, C >= S) needs no
+    # scatter at all — slots are the identity, so the cache is a pad.  The
+    # scatter path's (B,S) advanced indexing forces GSPMD to replicate the
+    # whole cache (see EXPERIMENTS.md §Perf, qwen2-vl prefill iteration).
+    hd = cfg.resolved_head_dim
+    keep = min(C, S)
+    ks_last, vs_last = ks[:, :, S - keep:], vs[:, :, S - keep:]
+    pos_last = abs_pos[:, S - keep:]
+    # (when C >= S nothing wraps, so "slot i holds token i" is always a
+    # valid layout: decode continues writing at slot length % C == S, and
+    # masking reads absolute positions from slot_pos, never from slot ids)
+    if C >= S:
+        pad = ((0, 0), (0, 0), (0, C - S), (0, 0), (0, 0))
+        cache_k = jnp.pad(ks_last, pad)
+        cache_v = jnp.pad(vs_last, pad)
+        slot_pos = jnp.pad(pos_last, ((0, 0), (0, C - S)),
+                           constant_values=-1)
+    else:
+        slots = pos_last % C                                # (B, keep)
+        cache_k = jnp.zeros((cfg.num_layers, B, C, cfg.n_kv, hd), ks.dtype)
+        cache_v = jnp.zeros_like(cache_k)
+        bidx = jnp.arange(B)[:, None]
+        cache_k = cache_k.at[:, bidx, slots].set(ks_last)
+        cache_v = cache_v.at[:, bidx, slots].set(vs_last)
+        slot_pos = jnp.full((B, C), -1,
+                            jnp.int32).at[bidx, slots].set(pos_last)
+    cache = {"k": cache_k, "v": cache_v, "slot_pos": slot_pos,
+             "length": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params: PyTree, cfg: ArchConfig, token: jax.Array,
+                cache: PyTree) -> tuple[jax.Array, PyTree]:
+    """One-token decode against the cache.
+
+    token: (B, 1) int32.  Returns (logits (B,1,V), updated cache).
+    """
+    B = token.shape[0]
+    pos_scalar = cache["length"]
+    positions = make_positions(cfg, B, 1, offset=pos_scalar)
+    acfg = attn_config(cfg)
+    x = layers.embed(params["embed"], token)
+    C = cache["k"].shape[2]
+    slot = pos_scalar % C
+    abs_pos = _abs_positions(positions)                     # (B, 1)
+    slot_pos = cache["slot_pos"].at[:, slot].set(abs_pos[:, 0])
+    kv_valid = slot_pos >= 0                                # (B, C)
+    kv_positions = jnp.maximum(slot_pos, 0)
+
+    def body(x, scanned):
+        lp, ck, cv = scanned
+        h = layers.norm_apply(cfg.norm, lp["attn_norm"], x)
+        k, v = layers.project_kv(lp["attn"], acfg, h, positions)  # (B,1,kv,hd)
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, slot, 0, 0))
+        x = x + layers.attention(lp["attn"], acfg, h, positions,
+                                 kv_override=(ck, cv),
+                                 kv_positions=kv_positions,
+                                 kv_valid=kv_valid)
+        h2 = layers.norm_apply(cfg.norm, lp["mlp_norm"], x)
+        if cfg.moe is not None:
+            out, _ = moe_lib.moe_apply(lp["moe"], cfg.moe, h2)
+        else:
+            out = layers.mlp(lp["mlp"], h2, cfg.mlp_kind)
+        return x + out, (ck, cv)
+
+    x, (new_k, new_v) = jax.lax.scan(body, x,
+                                     (params["layers"], cache["k"], cache["v"]))
+    x = layers.norm_apply(cfg.norm, params["final_norm"], x)
+    logits = unembed(params, cfg, x)
+    new_cache = {"k": new_k, "v": new_v, "slot_pos": slot_pos,
+                 "length": pos_scalar + 1}
+    return logits, new_cache

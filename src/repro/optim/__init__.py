@@ -1,0 +1,43 @@
+"""Optimizers, schedules, and gradient transforms (optax-style, self-contained).
+
+The container has no optax; this subpackage implements the pieces the
+framework needs: SGD/Adam/AdamW/Adafactor-lite on arbitrary pytrees,
+global-norm clipping, LR schedules, and chaining.  All transforms follow the
+``init(params) -> state`` / ``update(grads, state, params) -> (updates, state)``
+protocol so the trainer stays agnostic.
+"""
+from repro.optim.optimizers import (
+    GradientTransform,
+    adam,
+    adamw,
+    adafactor_lite,
+    sgd,
+    chain,
+    clip_by_global_norm,
+    scale_by_schedule,
+    apply_updates,
+    global_norm,
+)
+from repro.optim.schedules import (
+    constant_schedule,
+    cosine_decay_schedule,
+    linear_warmup_cosine,
+    linear_schedule,
+)
+
+__all__ = [
+    "GradientTransform",
+    "adam",
+    "adamw",
+    "adafactor_lite",
+    "sgd",
+    "chain",
+    "clip_by_global_norm",
+    "scale_by_schedule",
+    "apply_updates",
+    "global_norm",
+    "constant_schedule",
+    "cosine_decay_schedule",
+    "linear_warmup_cosine",
+    "linear_schedule",
+]

@@ -1,0 +1,280 @@
+"""Pytree optimizers.
+
+Protocol (optax-compatible shape):
+
+    tx = adamw(lr=..., ...)
+    state  = tx.init(params)
+    updates, state = tx.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+All states are pytrees of arrays, so they shard exactly like the parameters
+they track (ZeRO-1 falls out of passing sharded ``params`` at init).
+``adafactor_lite`` provides a factored second moment for very large models
+where full Adam state would not fit HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientTransform:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, Optional[PyTree]], tuple[PyTree, PyTree]]
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.asarray(0.0, jnp.float32)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)
+
+
+# ---------------------------------------------------------------------------
+# Elementary transforms
+# ---------------------------------------------------------------------------
+
+class ScaleState(NamedTuple):
+    count: jax.Array
+
+
+def scale_by_schedule(schedule: Callable[[jax.Array], jax.Array]) -> GradientTransform:
+    def init(params):
+        del params
+        return ScaleState(count=jnp.zeros([], jnp.int32))
+
+    def update(updates, state, params=None):
+        del params
+        lr = schedule(state.count)
+        updates = jax.tree.map(lambda u: -lr * u, updates)
+        return updates, ScaleState(count=state.count + 1)
+
+    return GradientTransform(init, update)
+
+
+class ClipState(NamedTuple):
+    pass
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransform:
+    def init(params):
+        del params
+        return ClipState()
+
+    def update(updates, state, params=None):
+        del params
+        norm = global_norm(updates)
+        scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+        updates = jax.tree.map(lambda u: u * scale, updates)
+        return updates, state
+
+    return GradientTransform(init, update)
+
+
+class AdamState(NamedTuple):
+    count: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def _scale_by_adam(b1: float, b2: float, eps: float,
+                   state_dtype: jnp.dtype) -> GradientTransform:
+    def init(params):
+        mu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=state_dtype), params)
+        nu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=state_dtype), params)
+        return AdamState(count=jnp.zeros([], jnp.int32), mu=mu, nu=nu)
+
+    def update(updates, state, params=None):
+        del params
+        count = state.count + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(state_dtype),
+                          state.mu, updates)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                          * jnp.square(g.astype(state_dtype)), state.nu, updates)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        upd = jax.tree.map(
+            lambda m, v: (m / c1) / (jnp.sqrt(v / c2) + eps), mu, nu)
+        return upd, AdamState(count=count, mu=mu, nu=nu)
+
+    return GradientTransform(init, update)
+
+
+class WeightDecayState(NamedTuple):
+    pass
+
+
+def _add_decayed_weights(weight_decay: float,
+                         mask_fn: Optional[Callable] = None) -> GradientTransform:
+    def init(params):
+        del params
+        return WeightDecayState()
+
+    def update(updates, state, params=None):
+        assert params is not None, "weight decay needs params"
+        if mask_fn is None:
+            updates = jax.tree.map(
+                lambda u, p: u + weight_decay * p.astype(u.dtype), updates, params)
+        else:
+            mask = mask_fn(params)
+            updates = jax.tree.map(
+                lambda u, p, m: u + (weight_decay * p.astype(u.dtype) if m else 0.0),
+                updates, params, mask)
+        return updates, state
+
+    return GradientTransform(init, update)
+
+
+def chain(*transforms: GradientTransform) -> GradientTransform:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(updates, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            updates, s = t.update(updates, s, params)
+            new_state.append(s)
+        return updates, tuple(new_state)
+
+    return GradientTransform(init, update)
+
+
+# ---------------------------------------------------------------------------
+# User-facing optimizers
+# ---------------------------------------------------------------------------
+
+def sgd(learning_rate, momentum: float = 0.0) -> GradientTransform:
+    schedule = learning_rate if callable(learning_rate) else (lambda _: jnp.float32(learning_rate))
+
+    class MomState(NamedTuple):
+        count: jax.Array
+        trace: PyTree
+
+    def init(params):
+        trace = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return MomState(count=jnp.zeros([], jnp.int32), trace=trace)
+
+    def update(updates, state, params=None):
+        del params
+        if momentum:
+            trace = jax.tree.map(lambda t, g: momentum * t + g, state.trace, updates)
+            updates = trace
+        else:
+            trace = None
+        lr = schedule(state.count)
+        updates = jax.tree.map(lambda u: -lr * u, updates)
+        return updates, MomState(count=state.count + 1, trace=trace)
+
+    return GradientTransform(init, update)
+
+
+def adam(learning_rate, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         state_dtype=jnp.float32) -> GradientTransform:
+    schedule = learning_rate if callable(learning_rate) else constant(learning_rate)
+    return chain(_scale_by_adam(b1, b2, eps, state_dtype), scale_by_schedule(schedule))
+
+
+def adamw(learning_rate, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, clip_norm: Optional[float] = 1.0,
+          state_dtype=jnp.float32,
+          decay_mask_fn: Optional[Callable] = None) -> GradientTransform:
+    """AdamW with optional global-norm clipping — the LM-training default."""
+    schedule = learning_rate if callable(learning_rate) else constant(learning_rate)
+    parts = []
+    if clip_norm is not None:
+        parts.append(clip_by_global_norm(clip_norm))
+    parts.append(_scale_by_adam(b1, b2, eps, state_dtype))
+    parts.append(_add_decayed_weights(weight_decay, decay_mask_fn))
+    parts.append(scale_by_schedule(schedule))
+    return chain(*parts)
+
+
+class AdafactorState(NamedTuple):
+    count: jax.Array
+    row: PyTree    # factored second moment, rows   (for >=2D params)
+    col: PyTree    # factored second moment, cols
+    full: PyTree   # unfactored second moment       (for <2D params)
+
+
+def adafactor_lite(learning_rate, decay: float = 0.8, eps: float = 1e-30,
+                   clip_threshold: float = 1.0) -> GradientTransform:
+    """Factored second-moment optimizer for very large models (no first moment).
+
+    Memory: O(rows + cols) per matrix instead of O(rows*cols) — keeps the
+    optimizer state of e.g. arctic-480b inside HBM budgets (see EXPERIMENTS.md
+    §Dry-run memory notes).
+    """
+    schedule = learning_rate if callable(learning_rate) else constant(learning_rate)
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def rowinit(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p) else jnp.zeros([], jnp.float32)
+
+        def colinit(p):
+            return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                    if _factored(p) else jnp.zeros([], jnp.float32))
+
+        def fullinit(p):
+            return jnp.zeros([], jnp.float32) if _factored(p) else jnp.zeros_like(p, jnp.float32)
+
+        return AdafactorState(
+            count=jnp.zeros([], jnp.int32),
+            row=jax.tree.map(rowinit, params),
+            col=jax.tree.map(colinit, params),
+            full=jax.tree.map(fullinit, params),
+        )
+
+    def update(updates, state, params=None):
+        count = state.count + 1
+        beta = 1.0 - (count.astype(jnp.float32)) ** (-decay)
+
+        def upd_one(g, r, c, f):
+            g32 = g.astype(jnp.float32)
+            sq = jnp.square(g32) + eps
+            if g.ndim >= 2:
+                r = beta * r + (1 - beta) * jnp.mean(sq, axis=-1)
+                c = beta * c + (1 - beta) * jnp.mean(sq, axis=-2)
+                rmean = jnp.mean(r, axis=-1, keepdims=True)
+                vhat = (r / jnp.maximum(rmean, eps))[..., None] * c[..., None, :]
+                u = g32 / jnp.sqrt(jnp.maximum(vhat, eps))
+            else:
+                f = beta * f + (1 - beta) * sq
+                u = g32 / jnp.sqrt(jnp.maximum(f, eps))
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return u, r, c, f
+
+        flat_g, treedef = jax.tree.flatten(updates)
+        flat_r = treedef.flatten_up_to(state.row)
+        flat_c = treedef.flatten_up_to(state.col)
+        flat_f = treedef.flatten_up_to(state.full)
+        out = [upd_one(g, r, c, f) for g, r, c, f in zip(flat_g, flat_r, flat_c, flat_f)]
+        us, rs, cs, fs = zip(*out) if out else ((), (), (), ())
+        lr = schedule(count - 1)
+        us = [(-lr * u).astype(g.dtype) for u, g in zip(us, flat_g)]
+        return (treedef.unflatten(us),
+                AdafactorState(count=count, row=treedef.unflatten(rs),
+                               col=treedef.unflatten(cs), full=treedef.unflatten(fs)))
+
+    return GradientTransform(init, update)
+
+
+def constant(value: float):
+    def schedule(_):
+        return jnp.asarray(value, jnp.float32)
+
+    return schedule

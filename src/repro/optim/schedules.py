@@ -1,0 +1,42 @@
+"""Learning-rate schedules as pure ``step -> lr`` callables (jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(value: float):
+    def schedule(step):
+        return jnp.asarray(value, dtype=jnp.float32)
+
+    return schedule
+
+
+def linear_schedule(init_value: float, end_value: float, transition_steps: int):
+    def schedule(step):
+        frac = jnp.clip(step / max(transition_steps, 1), 0.0, 1.0)
+        return jnp.asarray(init_value + frac * (end_value - init_value), jnp.float32)
+
+    return schedule
+
+
+def cosine_decay_schedule(init_value: float, decay_steps: int, alpha: float = 0.0):
+    def schedule(step):
+        frac = jnp.clip(step / max(decay_steps, 1), 0.0, 1.0)
+        cosine = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.asarray(init_value * ((1 - alpha) * cosine + alpha), jnp.float32)
+
+    return schedule
+
+
+def linear_warmup_cosine(peak_value: float, warmup_steps: int, total_steps: int,
+                         end_value: float = 0.0):
+    """Linear warmup from 0 to ``peak_value`` then cosine decay to ``end_value``."""
+
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_value * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = end_value + (peak_value - end_value) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, cos).astype(jnp.float32)
+
+    return schedule

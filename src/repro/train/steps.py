@@ -1,0 +1,152 @@
+"""Train-step builders: loss, gradient accumulation, optimizer update,
+sharding constraints, donation.  One jit-compiled function per
+(arch x shape x mesh) — the artifact the dry-run lowers and the launcher
+runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed import sharding
+from repro.models import registry
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    z_loss: float = 1e-4
+    aux_loss_weight: float = 0.01        # MoE load-balance loss
+    optimizer: str = "adamw"             # adamw | adafactor
+    microbatches: int = 1                # gradient accumulation
+    remat: bool = True
+
+
+def make_optimizer(s: TrainSettings) -> optim.GradientTransform:
+    if s.optimizer == "adafactor":
+        return optim.adafactor_lite(s.learning_rate)
+    return optim.adamw(s.learning_rate, weight_decay=s.weight_decay,
+                       clip_norm=s.clip_norm)
+
+
+def loss_fn(params: PyTree, cfg: ArchConfig, batch: dict, settings: TrainSettings,
+            mesh=None) -> tuple[jax.Array, dict]:
+    logits, aux = registry.forward(params, cfg, batch, remat=settings.remat)
+    if mesh is not None:
+        # keep the (B, S, V) logits sharded: batch over (pod, data), vocab
+        # over model — the largest single activation in the program
+        ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        logits = jax.lax.with_sharding_constraint(
+            logits, NamedSharding(mesh, P(ba, None, "model")))
+    labels = batch["labels"]
+    logits32 = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits32, axis=-1)
+    # label logit via iota-mask reduction: elementwise over the
+    # vocab-sharded logits + a sharded sum — take_along_axis would gather
+    # (replicate) the full logits tensor
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, logits32.shape,
+                                         logits32.ndim - 1)
+    label_logit = jnp.sum(
+        jnp.where(vocab_ids == labels[..., None], logits32, 0.0), axis=-1)
+    nll = jnp.mean(logz - label_logit)
+    zl = settings.z_loss * jnp.mean(jnp.square(logz))
+    total = nll + zl + settings.aux_loss_weight * aux
+    return total, {"nll": nll, "z_loss": zl, "aux": aux}
+
+
+def grads_fn(params: PyTree, cfg: ArchConfig, batch: dict,
+             settings: TrainSettings, mesh=None):
+    """(loss, metrics), grads — with optional microbatch accumulation."""
+    vg = jax.value_and_grad(loss_fn, has_aux=True)
+    if settings.microbatches <= 1:
+        (loss, metrics), grads = vg(params, cfg, batch, settings, mesh)
+        return loss, metrics, grads
+
+    n = settings.microbatches
+
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    # positions has batch on axis 1
+    micro = {}
+    for k, v in batch.items():
+        if k == "positions":
+            micro[k] = jnp.moveaxis(
+                v.reshape(v.shape[0], n, v.shape[1] // n, *v.shape[2:]), 1, 0)
+        else:
+            micro[k] = split(v)
+
+    def body(carry, mb):
+        loss_acc, grads_acc = carry
+        (loss, metrics), grads = vg(params, cfg, mb, settings, mesh)
+        grads_acc = jax.tree.map(lambda a, g: a + g, grads_acc, grads)
+        return (loss_acc + loss, grads_acc), metrics
+
+    zero_grads = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss_sum, grads), metrics = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), zero_grads), micro)
+    grads = jax.tree.map(lambda g: g / n, grads)
+    metrics = jax.tree.map(lambda m: m[-1], metrics)
+    return loss_sum / n, metrics, grads
+
+
+def build_train_step(cfg: ArchConfig, settings: TrainSettings, mesh=None
+                     ) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  Not yet jitted — the caller wraps with jax.jit and shardings
+    (launch/train.py, launch/dryrun.py)."""
+    tx = make_optimizer(settings)
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = grads_fn(params, cfg, batch, settings, mesh)
+        updates, opt_state = tx.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        metrics = dict(metrics, loss=loss,
+                       grad_norm=optim.global_norm(grads))
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def abstract_state(cfg: ArchConfig, settings: TrainSettings):
+    """ShapeDtypeStructs for (params, opt_state) — no allocation."""
+    tx = make_optimizer(settings)
+    params = jax.eval_shape(
+        lambda: registry.init_params(jax.random.key(0), cfg))
+    opt_state = jax.eval_shape(tx.init, params)
+    return params, opt_state
+
+
+def state_shardings(cfg: ArchConfig, settings: TrainSettings, mesh):
+    """NamedShardings for (params, opt_state).
+
+    Optimizer state additionally shards over "data" (ZeRO-1) wherever a
+    large leaf still has a free dim — fp32 moments are the biggest resident
+    tensors and, unlike FSDP'd *weights*, resharding them costs one
+    transfer per optimizer step, not per layer per microbatch.
+    """
+    params_s, opt_s = abstract_state(cfg, settings)
+    p_specs = sharding.param_specs(cfg, params_s, mesh)
+    o_specs = sharding.opt_state_specs(opt_s, params_s, p_specs)
+    o_specs = jax.tree.map(
+        lambda spec, leaf: (sharding.fsdp_extend(spec, leaf.shape, mesh,
+                                                 min_size=4096,
+                                                 skip_tp_experts=False)
+                            if leaf.ndim >= 2 else spec),
+        o_specs, opt_s, is_leaf=lambda x: isinstance(x, P))
+    return (sharding.to_named(p_specs, mesh),
+            sharding.to_named(o_specs, mesh), params_s, opt_s)

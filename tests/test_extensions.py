@@ -1,0 +1,84 @@
+"""Tests for the extended DSE dimensions (encodings, memory blocks,
+weight precision, batch fixed-point)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dse, encoding, validate
+from repro.core.accelerator import paper_nets
+
+
+class TestTTFS:
+    def test_single_spike_per_neuron(self):
+        x = jnp.asarray([[0.1, 0.5, 0.9, 1.0]])
+        spikes = encoding.ttfs_encode(x, 10)
+        counts = np.asarray(spikes.sum(0))
+        np.testing.assert_array_equal(counts, [[1, 1, 1, 1]])
+
+    def test_brighter_spikes_earlier(self):
+        x = jnp.asarray([[0.2, 0.8]])
+        spikes = np.asarray(encoding.ttfs_encode(x, 10))
+        t_dim = spikes[:, 0, 0].argmax()
+        t_bright = spikes[:, 0, 1].argmax()
+        assert t_bright < t_dim
+
+    def test_zero_never_spikes(self):
+        x = jnp.zeros((1, 5))
+        assert float(encoding.ttfs_encode(x, 8).sum()) == 0.0
+
+    def test_sparser_than_rate(self):
+        x = jnp.asarray(np.random.default_rng(0).uniform(0, 1, (4, 16)),
+                        jnp.float32)
+        ttfs = encoding.ttfs_encode(x, 20)
+        rate = encoding.rate_encode(jax.random.key(0), x, 20)
+        assert float(ttfs.mean()) < float(rate.mean())
+
+
+class TestBurst:
+    def test_burst_length_scales_with_intensity(self):
+        x = jnp.asarray([[0.0, 0.25, 0.5, 1.0]])
+        spikes = np.asarray(encoding.burst_encode(jax.random.key(0), x, 10,
+                                                  max_burst=4))
+        np.testing.assert_array_equal(spikes.sum(0), [[0, 1, 2, 4]])
+
+    def test_burst_is_leading_consecutive(self):
+        x = jnp.asarray([[0.75]])
+        s = np.asarray(encoding.burst_encode(jax.random.key(0), x, 8,
+                                             max_burst=4))[:, 0, 0]
+        np.testing.assert_array_equal(s, [1, 1, 1, 0, 0, 0, 0, 0])
+
+
+class TestMemoryBlockSweep:
+    def test_contention_monotone(self):
+        cfg = paper_nets.build("net-1", lhr=(2, 2, 2))
+        counts = paper_nets.paper_counts("net-1", cfg)
+        cands = dse.sweep_memory_blocks(cfg, counts, divisors=(1, 2, 4))
+        cycles = [c.cycles for c in cands]
+        luts = [c.lut for c in cands]
+        assert cycles[0] < cycles[1] < cycles[2]     # fewer blocks = slower
+        assert luts[0] > luts[1] > luts[2]           # ... but smaller
+
+    def test_weight_bits_scale_bram(self):
+        cfg = paper_nets.build("net-1")
+        brams = dse.sweep_weight_bits(cfg, (4, 8, 16))
+        assert brams[4] < brams[8] < brams[16]
+        assert brams[16] == pytest.approx(2 * brams[8], rel=0.05)
+
+
+class TestBatchFixedPoint:
+    @pytest.mark.parametrize("seed", range(3))
+    def test_batch_matches_per_sample(self, seed):
+        rng = np.random.default_rng(seed)
+        sizes = (12, 8, 6)
+        w = [rng.normal(0, 0.5, size=(sizes[i], sizes[i + 1]))
+             for i in range(2)]
+        b = [rng.normal(0, 0.1, size=(sizes[i + 1],)) for i in range(2)]
+        net = validate.quantize(w, b, beta=0.9, threshold=1.0)
+        spikes = (rng.random((5, 4, 12)) < 0.4).astype(np.int64)
+        batch_out = validate.reference_apply_batch(net, spikes)
+        for i in range(4):
+            single = validate.reference_apply(net, spikes[:, i])
+            np.testing.assert_array_equal(batch_out[:, i], single)

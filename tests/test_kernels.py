@@ -1,0 +1,173 @@
+"""Per-kernel correctness: sweep shapes/dtypes in interpret mode and assert
+allclose against the ref.py pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.key(0)
+
+
+def _lif_inputs(shape, dtype, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    u = jax.random.normal(k1, shape, dtype)
+    s = (jax.random.uniform(k2, shape) < 0.3).astype(dtype)
+    c = jax.random.normal(k3, shape, dtype)
+    return u, s, c
+
+
+class TestLIFKernel:
+    @pytest.mark.parametrize("shape", [(8, 512), (1, 100), (3, 700), (16, 2048),
+                                       (5, 1)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, shape, dtype):
+        u, s, c = _lif_inputs(shape, dtype)
+        got_u, got_s = ops.lif_step(u, s, c, beta=0.9, threshold=1.0)
+        want_u, want_s = ref.lif_step_ref(u, s, c, beta=0.9, threshold=1.0)
+        tol = 1e-6 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(got_u, np.float32),
+                                   np.asarray(want_u, np.float32), atol=tol)
+        np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+
+    @pytest.mark.parametrize("reset", ["subtract", "zero"])
+    @pytest.mark.parametrize("beta,threshold", [(0.5, 1.0), (0.95, 0.5),
+                                                (0.23, 2.0)])
+    def test_parameter_sweep(self, reset, beta, threshold):
+        u, s, c = _lif_inputs((4, 300), jnp.float32, seed=7)
+        got = ops.lif_step(u, s, c, beta=beta, threshold=threshold,
+                           reset_mechanism=reset)
+        want = ref.lif_step_ref(u, s, c, beta=beta, threshold=threshold,
+                                reset_mechanism=reset)
+        np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                                   atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+    def test_agrees_with_core_lif(self):
+        """The kernel implements the same forward as repro.core.lif."""
+        from repro.core.lif import LIFParams, lif_step as core_step
+        u, s, c = _lif_inputs((2, 64), jnp.float32, seed=3)
+        got_u, got_s = ops.lif_step(u, s, c, beta=0.9, threshold=1.0)
+        want_u, want_s = core_step(u, s, c, LIFParams(beta=0.9, threshold=1.0))
+        np.testing.assert_allclose(np.asarray(got_u), np.asarray(want_u),
+                                   atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+
+
+class TestSpikeGemm:
+    @pytest.mark.parametrize("shape", [(128, 128, 128), (256, 512, 128),
+                                       (100, 333, 77), (8, 1024, 64),
+                                       (1, 784, 500)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("density", [0.0, 0.05, 0.5])
+    def test_matches_dense_ref(self, shape, dtype, density):
+        M, K, N = shape
+        k1, k2 = jax.random.split(jax.random.key(42))
+        s = (jax.random.uniform(k1, (M, K)) < density).astype(dtype)
+        w = (jax.random.normal(k2, (K, N)) * 0.1).astype(dtype)
+        got = ops.spike_gemm(s, w)
+        want = ref.spike_gemm_ref(s, w)
+        tol = 1e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=tol, rtol=tol)
+
+    @pytest.mark.parametrize("blocks", [(128, 128, 128), (8, 128, 256)])
+    def test_block_shape_sweep(self, blocks):
+        bm, bk, bn = blocks
+        k1, k2 = jax.random.split(jax.random.key(1))
+        s = (jax.random.uniform(k1, (64, 300)) < 0.1).astype(jnp.float32)
+        w = jax.random.normal(k2, (300, 200), jnp.float32)
+        got = ops.spike_gemm(s, w, block_m=bm, block_k=bk, block_n=bn)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(ref.spike_gemm_ref(s, w)),
+                                   atol=1e-4)
+
+    def test_all_zero_input_skips_everything(self):
+        s = jnp.zeros((128, 256), jnp.float32)
+        w = jnp.ones((256, 128), jnp.float32)
+        out = ops.spike_gemm(s, w)
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+        assert ops.skip_fraction(s) == 1.0
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_flags_complete_and_sound(self, seed):
+        """Property: a flag is 0 iff its tile holds no spikes."""
+        rng = np.random.default_rng(seed)
+        s = (rng.random((256, 512)) < 0.01).astype(np.float32)
+        flags = np.asarray(ref.block_flags_ref(jnp.asarray(s), 128, 128))
+        tiles = s.reshape(2, 128, 4, 128).sum((1, 3))
+        np.testing.assert_array_equal(flags, (tiles > 0).astype(np.int32))
+
+    def test_uniform_sparsity_rarely_skips(self):
+        """Documenting the tile-granularity gap: uniformly-spread 1% firing
+        leaves essentially no 8x128 tile empty (see ops.py commentary)."""
+        rng = np.random.default_rng(0)
+        s = (rng.random((8, 4096)) < 0.01).astype(np.float32)
+        frac = ops.skip_fraction(jnp.asarray(s), block_m=8, block_k=128)
+        assert frac < 0.05
+
+    def test_profiled_permutation_unlocks_skips(self):
+        """Heavy-tailed firing + profile-guided permutation -> real skips,
+        with bit-exact results."""
+        rng = np.random.default_rng(0)
+        K = 4096
+        rates = np.where(rng.random(K) < 0.85, 0.001, 0.15)  # heavy tail
+        s = (rng.random((32, K)) < rates).astype(np.float32)
+        w = rng.normal(size=(K, 256)).astype(np.float32) * 0.1
+        base_skip = ops.skip_fraction(jnp.asarray(s), 8, 128)
+        perm = ops.firing_rate_permutation(jnp.asarray(s.mean(0)))
+        sp, wp = ops.apply_permutation(jnp.asarray(s), jnp.asarray(w), perm)
+        perm_skip = ops.skip_fraction(sp, 8, 128)
+        assert perm_skip > base_skip + 0.3, (base_skip, perm_skip)
+        out = ops.spike_gemm_profiled(jnp.asarray(s), jnp.asarray(w), perm,
+                                      block_m=8)
+        np.testing.assert_allclose(np.asarray(out), s @ w, atol=1e-3)
+
+    def test_gradient_path_via_ref(self):
+        """Training uses the ref path (kernel is inference-side); sanity-check
+        the oracle is differentiable."""
+        s = (jax.random.uniform(jax.random.key(0), (16, 32)) < 0.3
+             ).astype(jnp.float32)
+        w = jax.random.normal(jax.random.key(1), (32, 8))
+        g = jax.grad(lambda w: ref.spike_gemm_ref(s, w).sum())(w)
+        np.testing.assert_allclose(np.asarray(g),
+                                   np.asarray(jnp.broadcast_to(s.sum(0)[:, None],
+                                                               (32, 8))))
+
+
+class TestPENCCompact:
+    """PENC address-extraction kernel vs oracle vs the serial validator."""
+
+    @pytest.mark.parametrize("shape", [(8, 128), (3, 100), (16, 777)])
+    @pytest.mark.parametrize("density", [0.0, 0.1, 0.9])
+    def test_matches_ref(self, shape, density):
+        B, N = shape
+        s = (jax.random.uniform(jax.random.key(7), (B, N)) < density
+             ).astype(jnp.float32)
+        cap = min(N, 128)
+        got_idx, got_cnt = ops.penc_compact(s, capacity=cap)
+        want_idx, want_cnt = ref.penc_compact_ref(s, cap)
+        np.testing.assert_array_equal(np.asarray(got_idx),
+                                      np.asarray(want_idx))
+        np.testing.assert_array_equal(np.asarray(got_cnt),
+                                      np.asarray(want_cnt))
+
+    def test_matches_serial_penc(self):
+        """Same semantics as the hardware validator's chunked priority
+        encoder when capacity covers the row."""
+        from repro.core import validate
+        rng = np.random.default_rng(3)
+        bits = (rng.random((4, 250)) < 0.2).astype(np.float32)
+        idx, cnt = ops.penc_compact(jnp.asarray(bits), capacity=250)
+        for b in range(4):
+            serial = validate.penc_compress(bits[b].astype(np.int64))
+            got = [int(i) for i in np.asarray(idx[b]) if i >= 0]
+            assert got == serial
+            assert int(cnt[b]) == len(serial)
+
+    def test_capacity_drops_overflow(self):
+        s = jnp.ones((1, 64), jnp.float32)
+        idx, cnt = ops.penc_compact(s, capacity=16)
+        np.testing.assert_array_equal(np.asarray(idx[0]), np.arange(16))
+        assert int(cnt[0]) == 64    # count reports true spikes

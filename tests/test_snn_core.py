@@ -1,0 +1,174 @@
+"""Unit + property tests for the SNN substrate (LIF, encodings, networks)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encoding, snn
+from repro.core.lif import LIFParams, lif_init_state, lif_step, spike_fn
+
+
+class TestSpikeFn:
+    def test_forward_is_heaviside(self):
+        v = jnp.array([-1.0, -1e-6, 0.0, 1e-6, 3.0])
+        out = spike_fn(v)
+        np.testing.assert_array_equal(np.asarray(out), [0, 0, 0, 1, 1])
+
+    def test_surrogate_gradient_shape_and_peak(self):
+        g = jax.grad(lambda v: spike_fn(v).sum())(jnp.linspace(-2, 2, 101))
+        g = np.asarray(g)
+        assert g.argmax() == 50                      # peak at v == 0
+        assert np.isclose(g.max(), 1.0)              # 1/(1+25*0)^2
+        assert (g > 0).all()                         # smooth, everywhere positive
+
+    @pytest.mark.parametrize("seed", range(5))
+    def test_gradient_symmetric(self, seed):
+        v = jax.random.normal(jax.random.key(seed), (64,))
+        g = jax.grad(lambda x: spike_fn(x).sum())
+        np.testing.assert_allclose(np.asarray(g(v)), np.asarray(g(-v)), rtol=1e-6)
+
+
+class TestLIF:
+    def test_integrates_to_threshold(self):
+        p = LIFParams(beta=1.0, threshold=1.0)
+        u, s = lif_init_state((1,))
+        fired_at = None
+        for t in range(10):
+            u, s = lif_step(u, s, jnp.full((1,), 0.3), p)
+            if fired_at is None and float(s[0]) == 1.0:
+                fired_at = t
+        assert fired_at == 3                         # 0.3*4 = 1.2 > 1.0
+
+    def test_reset_subtract(self):
+        p = LIFParams(beta=1.0, threshold=1.0, reset_mechanism="subtract")
+        u, s = lif_init_state((1,))
+        u, s = lif_step(u, s, jnp.full((1,), 1.5), p)
+        assert float(s[0]) == 1.0
+        u2, s2 = lif_step(u, s, jnp.zeros((1,)), p)
+        # membrane was 1.5, reset subtracts threshold -> 0.5
+        np.testing.assert_allclose(float(u2[0]), 0.5)
+
+    def test_reset_zero(self):
+        p = LIFParams(beta=0.5, threshold=1.0, reset_mechanism="zero")
+        u, s = lif_init_state((1,))
+        u, s = lif_step(u, s, jnp.full((1,), 2.0), p)
+        u2, _ = lif_step(u, s, jnp.zeros((1,)), p)
+        np.testing.assert_allclose(float(u2[0]), 0.0)
+
+    def test_no_input_no_spikes(self):
+        p = LIFParams()
+        u, s = lif_init_state((8,))
+        for _ in range(20):
+            u, s = lif_step(u, s, jnp.zeros((8,)), p)
+        assert float(s.sum()) == 0.0
+
+
+class TestEncoding:
+    @pytest.mark.parametrize("seed", range(3))
+    def test_rate_encode_statistics(self, seed):
+        x = jnp.full((4, 10), 0.3)
+        spikes = encoding.rate_encode(jax.random.key(seed), x, 500)
+        rate = float(spikes.mean())
+        assert abs(rate - 0.3) < 0.02
+        assert set(np.unique(np.asarray(spikes))) <= {0.0, 1.0}
+
+    def test_rate_encode_extremes(self):
+        x = jnp.stack([jnp.zeros(5), jnp.ones(5)])
+        spikes = encoding.rate_encode(jax.random.key(0), x, 50)
+        assert float(spikes[:, 0].sum()) == 0.0
+        assert float(spikes[:, 1].mean()) == 1.0
+
+    def test_population_pool_conservation(self):
+        counts = jnp.arange(30.0).reshape(1, 30)
+        pooled = encoding.population_pool(counts, 10)
+        assert pooled.shape == (1, 10)
+        np.testing.assert_allclose(float(pooled.sum()), float(counts.sum()))
+
+    def test_population_decode_majority(self):
+        # class 2's pool spikes the most
+        train = np.zeros((5, 1, 12), np.float32)   # 4 classes x pcr 3
+        train[:, 0, 6:9] = 1.0
+        pred = encoding.population_decode(jnp.asarray(train), 4)
+        assert int(pred[0]) == 2
+
+
+class TestSNN:
+    def _cfg(self, pcr=2):
+        return snn.SNNConfig(
+            name="t", input_shape=(6, 6), layers=(
+                snn.Dense(16), snn.Dense(4 * pcr)),
+            num_classes=4, pcr=pcr, num_steps=7)
+
+    def test_shapes_and_binary_output(self):
+        cfg = self._cfg()
+        params = snn.init_params(jax.random.key(0), cfg)
+        x = encoding.rate_encode(jax.random.key(1), jnp.ones((3, 6, 6)) * 0.8, 7)
+        out = snn.apply(cfg, params, x)
+        assert out.shape == (7, 3, 8)
+        assert set(np.unique(np.asarray(out))) <= {0.0, 1.0}
+
+    def test_grad_flows_through_time(self):
+        cfg = self._cfg()
+        params = snn.init_params(jax.random.key(0), cfg)
+        x = encoding.rate_encode(jax.random.key(1), jnp.ones((2, 6, 6)) * 0.9, 7)
+        y = jnp.array([0, 1])
+
+        def loss(p):
+            return encoding.rate_loss(snn.apply(cfg, p, x), y, 4)
+
+        grads = jax.grad(loss)(params)
+        gn = sum(float(jnp.abs(g).sum()) for l in grads for g in l.values())
+        assert gn > 0.0 and np.isfinite(gn)
+
+    def test_conv_net_shapes(self):
+        cfg = snn.SNNConfig(
+            name="c", input_shape=(16, 16, 2), layers=(
+                snn.Conv(4, 3), snn.MaxPool(2), snn.Dense(8)),
+            num_classes=4, pcr=2, num_steps=5)
+        assert cfg.layer_sizes() == [16 * 16 * 4, 8]
+        params = snn.init_params(jax.random.key(0), cfg)
+        x = (jax.random.uniform(jax.random.key(1), (5, 2, 16, 16, 2)) < 0.2
+             ).astype(jnp.float32)
+        out = snn.apply(cfg, params, x)
+        assert out.shape == (5, 2, 8)
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_spike_counts_match_trains(self, seed):
+        """Conservation: counts reported for layer l+1's input == spikes
+        emitted by layer l (post-pool)."""
+        cfg = self._cfg()
+        params = snn.init_params(jax.random.key(seed), cfg)
+        x = encoding.rate_encode(jax.random.key(seed + 1),
+                                 jnp.ones((2, 6, 6)) * 0.7, 7)
+        counts = snn.spike_counts_per_layer(cfg, params, x)
+        all_spikes = snn.apply(cfg, params, x, return_all_layers=True)
+        np.testing.assert_allclose(
+            np.asarray(counts[0]), np.asarray(x.reshape(7, 2, -1).sum(-1)))
+        np.testing.assert_allclose(
+            np.asarray(counts[1]),
+            np.asarray(all_spikes[0].reshape(7, 2, -1).sum(-1)))
+
+    def test_more_steps_monotone_spike_budget(self):
+        cfg = self._cfg()
+        params = snn.init_params(jax.random.key(0), cfg)
+        totals = []
+        for T in (4, 8, 16):
+            x = encoding.rate_encode(jax.random.key(1),
+                                     jnp.ones((2, 6, 6)) * 0.6, T)
+            out = snn.apply(cfg, params, x)
+            totals.append(float(out.sum()))
+        assert totals[0] <= totals[1] <= totals[2]
+
+
+class TestTraining:
+    def test_snn_learns_synthetic(self):
+        from repro.core import train_snn
+        from repro.data import synthetic
+        data = synthetic.make_images(n_train=256, n_test=128, seed=3)
+        cfg = snn.SNNConfig(
+            name="learn", input_shape=(28, 28),
+            layers=(snn.Dense(64), snn.Dense(10 * 3)),
+            num_classes=10, pcr=3, num_steps=10)
+        res = train_snn.train(cfg, data, steps=60, batch_size=64, lr=3e-3)
+        assert res.train_loss[-1] < res.train_loss[0] * 0.5
+        assert res.test_accuracy > 0.8

@@ -1,0 +1,81 @@
+"""Spike-to-spike validation: serial hardware model == vectorized reference,
+exactly, across random nets/traffic/LHR (property-style sweep)."""
+import numpy as np
+import pytest
+
+from repro.core import validate
+
+
+def _random_net(rng, sizes):
+    weights = [rng.normal(0, 0.5, size=(sizes[i], sizes[i + 1]))
+               for i in range(len(sizes) - 1)]
+    biases = [rng.normal(0, 0.1, size=(sizes[i + 1],))
+              for i in range(len(sizes) - 1)]
+    return validate.quantize(weights, biases, beta=0.9, threshold=1.0)
+
+
+class TestPENC:
+    def test_compress_orders_addresses(self):
+        bits = np.zeros(250, np.int64)
+        bits[[5, 120, 119, 249, 0]] = 1
+        addrs = validate.penc_compress(bits, chunk=100)
+        assert addrs == [0, 5, 119, 120, 249]
+
+    def test_compress_empty(self):
+        assert validate.penc_compress(np.zeros(10, np.int64)) == []
+
+    @pytest.mark.parametrize("seed", range(5))
+    def test_compress_complete(self, seed):
+        rng = np.random.default_rng(seed)
+        bits = (rng.random(333) < 0.3).astype(np.int64)
+        addrs = validate.penc_compress(bits)
+        assert sorted(addrs) == list(np.nonzero(bits)[0])
+
+
+class TestSpikeToSpike:
+    @pytest.mark.parametrize("seed", range(6))
+    def test_hardware_equals_reference(self, seed):
+        rng = np.random.default_rng(seed)
+        net = _random_net(rng, (24, 16, 8))
+        spikes = (rng.random((6, 24)) < 0.3).astype(np.int64)
+        assert validate.validate(net, spikes)
+
+    @pytest.mark.parametrize("lhr", [[1, 1], [4, 2], [16, 8], [3, 5]])
+    def test_lhr_does_not_change_function(self, lhr):
+        """The LHR knob is a pure latency/area trade — never functional."""
+        rng = np.random.default_rng(42)
+        net = _random_net(rng, (24, 16, 8))
+        spikes = (rng.random((6, 24)) < 0.4).astype(np.int64)
+        assert validate.validate(net, spikes, lhr=lhr)
+
+    def test_quantized_net_actually_spikes(self):
+        rng = np.random.default_rng(1)
+        net = _random_net(rng, (24, 16, 8))
+        spikes = (rng.random((8, 24)) < 0.5).astype(np.int64)
+        out = validate.reference_apply(net, spikes)
+        assert out.sum() > 0
+
+    def test_float_vs_fixed_point_agreement(self):
+        """Quantization at Q8 should preserve most spikes vs float sim."""
+        rng = np.random.default_rng(7)
+        sizes = (24, 16, 8)
+        weights = [rng.normal(0, 0.5, size=(sizes[i], sizes[i + 1]))
+                   for i in range(2)]
+        biases = [rng.normal(0, 0.1, size=(sizes[i + 1],)) for i in range(2)]
+        net = validate.quantize(weights, biases, beta=0.9, threshold=1.0)
+        spikes = (rng.random((10, 24)) < 0.4).astype(np.int64)
+        fixed = validate.reference_apply(net, spikes)
+
+        # float simulation of the same dynamics
+        u = [np.zeros(16), np.zeros(8)]
+        s = [np.zeros(16), np.zeros(8)]
+        out = np.zeros((10, 8))
+        for t in range(10):
+            x = spikes[t].astype(float)
+            for l in range(2):
+                u[l] = 0.9 * u[l] + x @ weights[l] + biases[l] - 1.0 * s[l]
+                s[l] = (u[l] >= 1.0).astype(float)
+                x = s[l]
+            out[t] = s[-1]
+        agreement = (out == fixed).mean()
+        assert agreement > 0.95
