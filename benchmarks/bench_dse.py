@@ -1,0 +1,93 @@
+"""DSE sweep throughput: seed-style per-candidate object loop vs the chunked
+vectorized engine, on the identical candidate set.
+
+The seed engine vectorized latency and LUT but still built one ``Candidate``
+object per design and called scalar ``resources.energy_mj`` (a full
+``estimate`` + ``accumulate_ops``) per candidate in a Python loop — and the
+grid materialized every candidate up front.  The refactored engine streams
+chunks of a declarative ``SearchSpace`` through batched NumPy columns.  Each
+JSON line reports candidates/sec and peak traced allocations; the summary
+line reports the speedup (acceptance floor: >= 5x at 100k candidates).
+"""
+from __future__ import annotations
+
+import resource as _resource
+import time
+import tracemalloc
+
+import numpy as np
+
+from benchmarks.common import emit_json
+from repro.core import dse
+from repro.core.accelerator import arch, cycle_model, resources
+
+
+def _seed_style_sweep(cfg, counts, lhr: np.ndarray) -> list[dse.Candidate]:
+    """The seed engine's sweep loop, verbatim: vectorized cycles/LUT, then a
+    Python loop materializing a config + scalar energy per candidate."""
+    cycles = cycle_model.latency_cycles(cfg, counts, lhr_matrix=lhr)
+    lut = resources.estimate_lut_vector(cfg, lhr)
+    mask = dse.pareto_mask(cycles, lut)
+    cands = []
+    for i in range(len(lhr)):
+        c = cfg.with_lhr(tuple(int(x) for x in lhr[i]))
+        cands.append(dse.Candidate(
+            lhr=tuple(int(x) for x in lhr[i]),
+            cycles=float(cycles[i]), lut=float(lut[i]),
+            energy_mj=resources.energy_mj(c, counts, float(cycles[i])),
+            pareto=bool(mask[i])))
+    return cands
+
+
+def _chunked_sweep(cfg, counts, space, n: int, chunk_size: int):
+    acc = dse.ParetoAccumulator(("cycles", "lut"))
+    for start in range(0, n, chunk_size):
+        idx = np.arange(start, min(start + chunk_size, n), dtype=np.int64)
+        cols = space.decode(idx)
+        metrics = dse.evaluate_columns(cfg, counts, cols)
+        acc.update(dse.CandidateTable({**cols, **metrics}))
+    return acc.frontier
+
+
+def _measure(label: str, fn, n: int):
+    tracemalloc.start()
+    t0 = time.perf_counter()
+    out = fn()
+    dt = time.perf_counter() - t0
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    emit_json(f"dse/{label}", candidates=n, seconds=round(dt, 3),
+              cands_per_sec=round(n / dt),
+              peak_traced_mb=round(peak / 2**20, 1),
+              rss_mb=round(_resource.getrusage(
+                  _resource.RUSAGE_SELF).ru_maxrss / 1024, 1))
+    return out, dt
+
+
+def run(quick: bool = False):
+    n_target = 20_000 if quick else 100_000
+    # 6 fc layers of 256 logical neurons -> 9^6 = 531441 LHR vectors; both
+    # paths evaluate the same first n_target candidates of the grid.
+    cfg = arch.from_layer_sizes("bench", (512,) + (256,) * 6, num_steps=5)
+    counts = [np.full(5, 40.0)] * 6
+    space = dse.SearchSpace.product_lhr(cfg, max_lhr=256)
+    n = min(n_target, space.size)
+    lhr = space.decode(np.arange(n, dtype=np.int64))["lhr"]
+
+    frontier, dt_new = _measure(
+        "chunked_vectorized",
+        lambda: _chunked_sweep(cfg, counts, space, n, chunk_size=32768), n)
+    cands, dt_old = _measure(
+        "seed_object_loop", lambda: _seed_style_sweep(cfg, counts, lhr), n)
+
+    seed_frontier = sorted((c.cycles, c.lut) for c in cands if c.pareto)
+    new_frontier = sorted(zip(frontier.columns["cycles"].tolist(),
+                              frontier.columns["lut"].tolist()))
+    emit_json("dse/summary", candidates=n,
+              speedup=round(dt_old / dt_new, 1),
+              frontier_match=seed_frontier == new_frontier,
+              frontier_size=len(new_frontier))
+
+
+if __name__ == "__main__":
+    run()

@@ -48,12 +48,9 @@ def run(quick: bool = False):
     spikes_in = np.asarray(encoding.rate_encode(jax.random.key(0), x, 10)
                            ).reshape(10, len(y), -1).astype(np.int64)
     for bits in (4, 6, 8, 12):
-        fp = validate.quantize(weights, biases, beta=0.95, threshold=1.0,
-                               frac_bits=bits - 1)
-        out = validate.reference_apply_batch(fp, spikes_in)
-        pred = np.asarray(encoding.population_decode(
-            jnp.asarray(out.astype(np.float32)), 10))
-        acc = float((pred == y).mean())
+        acc = validate.quantized_accuracy(
+            weights, biases, spikes_in, y, num_classes=10,
+            frac_bits=bits - 1, beta=0.95, threshold=1.0)
         emit(f"ext/weight_bits/{bits}", 0.0,
              f"acc={acc:.3f} (float={res.test_accuracy:.3f}) "
              f"bram={brams.get(bits, '-')}")

@@ -38,11 +38,13 @@ def run(quick: bool = False):
             hw = hw_arch.from_layer_sizes(
                 cfg.name, (784, 64, 64, 10 * pcr), lhr=(1, 1, 1),
                 num_steps=T)
-            cycles = float(cycle_model.latency_cycles(hw, counts))
-            # serial-output variant: one NU serves the whole classifier —
-            # where the paper's "higher PCR costs latency" materializes
-            hw_serial = hw.with_lhr((1, 1, 10 * pcr))
-            cyc_serial = float(cycle_model.latency_cycles(hw_serial, counts))
+            # both variants in one batched call: the parallel classifier and
+            # the serial-output one (a single NU serves the whole classifier
+            # — where the paper's "higher PCR costs latency" materializes)
+            both = cycle_model.latency_cycles(
+                hw, counts, lhr_matrix=np.asarray([(1, 1, 1),
+                                                   (1, 1, 10 * pcr)]))
+            cycles, cyc_serial = float(both[0]), float(both[1])
             results[(pcr, T)] = (res.test_accuracy, cycles, cyc_serial)
             emit(f"fig7/pop{pcr}/T{T}", 0.0,
                  f"acc={res.test_accuracy:.3f} cycles={cycles:.0f} "

@@ -1,6 +1,7 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + CSV/JSON emission."""
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable
 
@@ -17,3 +18,8 @@ def timed(fn: Callable, *args, repeats: int = 3, **kw):
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def emit_json(name: str, **fields):
+    """One machine-readable result line (used by bench_dse throughput/RSS)."""
+    print(json.dumps({"name": name, **fields}, sort_keys=True))

@@ -19,11 +19,12 @@ def main() -> None:
                     help="reduced sweeps (CI-sized)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset: table1,fig1,fig6,fig7,"
-                         "kernels")
+                         "kernels,ext,dse")
     args = ap.parse_args()
 
-    from benchmarks import (bench_extensions, bench_fig1, bench_fig6,
-                            bench_fig7, bench_kernels, bench_table1)
+    from benchmarks import (bench_dse, bench_extensions, bench_fig1,
+                            bench_fig6, bench_fig7, bench_kernels,
+                            bench_table1)
     suites = {
         "table1": bench_table1.run,
         "fig1": bench_fig1.run,
@@ -31,6 +32,7 @@ def main() -> None:
         "fig7": bench_fig7.run,
         "kernels": bench_kernels.run,
         "ext": bench_extensions.run,
+        "dse": bench_dse.run,
     }
     selected = [s.strip() for s in args.only.split(",") if s.strip()] or \
         list(suites)

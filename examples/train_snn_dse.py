@@ -78,6 +78,59 @@ def main():
           f"({1-best.lut/base.lut:.0%} fewer LUTs, "
           f"{best.cycles/base_cycles:.1f}x latency)")
 
+    # ---- Joint multi-axis DSE (the new streaming engine) ----
+    # How to define a search space (see DESIGN.md §8 and the repro.core.dse
+    # package docstring):
+    #   * add_per_layer — independent options per layer (Cartesian product);
+    #   * add_joint     — options are whole per-layer vectors (all layers
+    #                     move together);
+    #   * add_global    — one value applied to every layer.
+    # Nothing is materialized: chunks of candidates stream through the
+    # vectorized cycle model + component library, and only the k-objective
+    # Pareto frontier is retained.
+    space = (dse.SearchSpace(accel)
+             .add_per_layer("lhr", [dse.pow2_values(min(32, l.logical))
+                                    for l in accel.layers])
+             .add_joint("mem_blocks",
+                        [tuple(max(1, l.num_nus // d) for l in accel.layers)
+                         for d in (1, 2, 4)])
+             .add_global("weight_bits", (4, 6, 8)))
+    result = dse.search(accel, counts, space,
+                        objectives=("cycles", "lut", "bram", "energy"))
+    print(f"\njoint DSE over LHR x mem_blocks x weight_bits: "
+          f"{result.n_evaluated} candidates, "
+          f"{len(result.frontier)} on the 4-objective frontier")
+    fr = result.frontier.sorted_by("cycles")
+    print(f"{'lhr':>16} {'mem':>14} {'bits':>4} {'cycles':>10} "
+          f"{'LUT':>8} {'BRAM':>5} {'energy':>9}")
+    for i in range(min(8, len(fr))):
+        r = fr.row(i)
+        print(f"{str(r['lhr']):>16} {str(r['mem_blocks']):>14} "
+              f"{r['weight_bits']:>4} {r['cycles']:>10.0f} "
+              f"{r['lut']/1e3:>7.1f}K {r['bram']:>5} "
+              f"{r['energy']:>8.3f}mJ")
+    # budget pick + materialized hardware config for the winner
+    row = result.best_within_latency(2.0 * base_cycles)
+    if row is not None:
+        hw_cfg = result.config_for(row)
+        print(f"\nsmallest joint design within 2x baseline latency: "
+              f"lhr={row['lhr']} mem={row['mem_blocks']} "
+              f"bits={row['weight_bits']} -> {row['lut']/1e3:.1f}K LUT, "
+              f"{row['bram']} BRAM ({hw_cfg.layers[0].weight_bits}-bit "
+              f"weights)")
+        # accuracy leg of the weight_bits axis (fixed-point datapath)
+        if args.dataset == "mnist":
+            spikes_b = np.asarray(encoding.rate_encode(
+                jax.random.key(1), jnp.asarray(data.x_test[:64]).reshape(64, -1),
+                cfg.num_steps)).astype(np.int64)
+            acc_q = validate.quantized_accuracy(
+                [np.asarray(w) for w in weights],
+                [np.asarray(b) for b in biases],
+                spikes_b, data.y_test[:64], num_classes=10,
+                frac_bits=int(row["weight_bits"]) - 1)
+            print(f"fixed-point accuracy at {row['weight_bits']} bits: "
+                  f"{acc_q:.3f} (float: {res.test_accuracy:.3f})")
+
 
 if __name__ == "__main__":
     main()

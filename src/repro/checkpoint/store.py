@@ -1,8 +1,12 @@
 """Sharded, atomic, async-capable checkpointing (no orbax in this container —
 msgpack + zstandard + numpy are the wire format).
 
-Layout:  <dir>/step_<N>/manifest.msgpack   (treedef-ordered leaf metadata)
-         <dir>/step_<N>/leaves.bin.zst     (concatenated raw leaf bytes)
+Layout:  <dir>/step_<N>/manifest.msgpack   (treedef-ordered leaf metadata
+                                            + compression codec)
+         <dir>/step_<N>/leaves.bin.zst     (concatenated raw leaf bytes;
+                                            zstd, or zlib where the
+                                            zstandard package is missing —
+                                            the manifest records which)
 
 Guarantees:
   * atomic publish — data is written to ``.tmp-<N>`` and ``os.replace``d,
@@ -24,7 +28,72 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+import zlib
+
+try:
+    import zstandard
+except ImportError:          # container without zstd bindings: zlib fallback
+    zstandard = None
+
+
+class _ZlibWriter:
+    def __init__(self, f, level):
+        self._f = f
+        self._c = zlib.compressobj(level)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self._f.write(self._c.flush())
+
+    def write(self, b):
+        self._f.write(self._c.compress(b))
+
+
+class _ZlibReader:
+    def __init__(self, f):
+        self._f = f
+        self._d = zlib.decompressobj()
+        self._buf = b""
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        pass
+
+    def read(self, n):
+        while len(self._buf) < n:
+            chunk = self._f.read(1 << 20)
+            if not chunk:
+                self._buf += self._d.flush()
+                break
+            self._buf += self._d.decompress(chunk)
+        out, self._buf = self._buf[:n], self._buf[n:]
+        return out
+
+
+def _writer(f):
+    """Best available compressor + its codec tag (recorded in the manifest
+    so restore never guesses)."""
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).stream_writer(f), "zstd"
+    return _ZlibWriter(f, 3), "zlib"
+
+
+def _reader(f, codec: str):
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd but the zstandard package "
+                "is not installed in this environment")
+        return zstandard.ZstdDecompressor().stream_reader(f)
+    if codec == "zlib":
+        return _ZlibReader(f)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
+
 
 PyTree = Any
 
@@ -68,13 +137,13 @@ def _write(directory: str, step: int, host: list[np.ndarray],
         meta.append({"shape": shape, "dtype": str(data.dtype),
                      "nbytes": data.nbytes})
         blobs.append(data.tobytes())
-    with open(os.path.join(tmp, _MANIFEST), "wb") as f:
-        f.write(msgpack.packb({"step": step, "leaves": meta}))
-    cctx = zstandard.ZstdCompressor(level=3)
     with open(os.path.join(tmp, _DATA), "wb") as f:
-        with cctx.stream_writer(f) as w:
+        w, codec = _writer(f)
+        with w:
             for b in blobs:
                 w.write(b)
+    with open(os.path.join(tmp, _MANIFEST), "wb") as f:
+        f.write(msgpack.packb({"step": step, "codec": codec, "leaves": meta}))
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)
@@ -122,10 +191,10 @@ def restore(directory: str, like: PyTree, step: Optional[int] = None,
     assert len(meta) == len(leaves_like), (
         f"checkpoint has {len(meta)} leaves, target tree has "
         f"{len(leaves_like)}")
-    dctx = zstandard.ZstdDecompressor()
+    codec = manifest.get("codec", "zstd")     # pre-codec checkpoints: zstd
     host = []
     with open(os.path.join(path, _DATA), "rb") as f:
-        with dctx.stream_reader(f) as r:
+        with _reader(f, codec) as r:
             for m, want in zip(meta, leaves_like):
                 buf = r.read(m["nbytes"])
                 arr = np.frombuffer(buf, dtype=np.dtype(m["dtype"])

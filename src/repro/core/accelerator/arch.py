@@ -12,7 +12,19 @@ import dataclasses
 import math
 from typing import Optional, Sequence
 
+import numpy as np
+
 from repro.core import snn
+
+
+def per_layer_col(matrix, l: int):
+    """Column ``l`` of a (C, L) per-layer candidate matrix, or a (C,)
+    global vector applied to every layer — the batched-DSE axis convention
+    shared by ``cycle_model`` and ``resources``."""
+    if matrix is None:
+        return None
+    m = np.asarray(matrix)
+    return m[:, l] if m.ndim == 2 else m
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +122,36 @@ class AcceleratorConfig:
         layers = tuple(dataclasses.replace(l, lhr=r)
                        for l, r in zip(self.layers, lhr))
         return dataclasses.replace(self, layers=layers)
+
+    def with_updates(self,
+                     lhr: Sequence[int] | None = None,
+                     mem_blocks: Sequence[int] | None = None,
+                     weight_bits: Sequence[int] | int | None = None,
+                     penc_width: Sequence[int] | int | None = None,
+                     clock_mhz: float | None = None) -> "AcceleratorConfig":
+        """Materialize one DSE candidate row as a concrete config.
+
+        Per-layer arguments take a length-L sequence; ``weight_bits`` and
+        ``penc_width`` also accept a single value applied to every layer.
+        """
+        def expand(v):
+            if v is None:
+                return None
+            if hasattr(v, "__len__"):
+                assert len(v) == len(self.layers), (v, len(self.layers))
+                return [int(x) for x in v]
+            return [int(v)] * len(self.layers)
+
+        per_layer = {"lhr": expand(lhr), "mem_blocks": expand(mem_blocks),
+                     "weight_bits": expand(weight_bits),
+                     "penc_width": expand(penc_width)}
+        layers = []
+        for i, l in enumerate(self.layers):
+            kw = {k: v[i] for k, v in per_layer.items() if v is not None}
+            layers.append(dataclasses.replace(l, **kw) if kw else l)
+        timing = (dataclasses.replace(self.timing, clock_mhz=float(clock_mhz))
+                  if clock_mhz is not None else self.timing)
+        return dataclasses.replace(self, layers=tuple(layers), timing=timing)
 
 
 # ---------------------------------------------------------------------------

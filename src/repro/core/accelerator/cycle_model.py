@@ -36,25 +36,33 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.accelerator.arch import AcceleratorConfig, LayerHW
+from repro.core.accelerator.arch import (AcceleratorConfig, LayerHW,
+                                         per_layer_col)
 
 
 def layer_latency(layer: LayerHW, spikes: np.ndarray, t: "TimingModel",
-                  lhr: np.ndarray | int | None = None) -> np.ndarray:
+                  lhr: np.ndarray | int | None = None,
+                  contention: np.ndarray | int | None = None,
+                  penc_chunks: np.ndarray | int | None = None) -> np.ndarray:
     """Latency (cycles) of one layer engine for one time step.
 
     ``spikes``: incoming spike count(s) — any shape, broadcastable.
-    ``lhr``: override for vectorised DSE sweeps (defaults to layer.lhr).
+    ``lhr``/``contention``/``penc_chunks``: overrides for vectorised DSE
+    sweeps (scalars or (C,) candidate vectors; default to the layer's own
+    derived values).  ``latency_cycles`` computes consistent overrides from
+    per-candidate lhr/mem_blocks/penc_width matrices.
     """
     lhr = layer.lhr if lhr is None else lhr
+    contention = layer.contention if contention is None else contention
+    penc_chunks = layer.penc_chunks if penc_chunks is None else penc_chunks
     spikes = np.asarray(spikes, dtype=np.float64)
-    penc = spikes + layer.penc_chunks
+    penc = spikes + penc_chunks
     if layer.kind == "fc":
-        acc = spikes * lhr * t.acc_cycles_per_op * layer.contention
+        acc = spikes * lhr * t.acc_cycles_per_op * contention
         act = lhr * np.float64(t.act_cycles)
     else:
         fan_out = layer.kernel * layer.kernel
-        acc = spikes * fan_out * lhr * t.acc_cycles_per_op * layer.contention
+        acc = spikes * fan_out * lhr * t.acc_cycles_per_op * contention
         if t.conv_event_driven_act:
             affected = np.minimum(spikes * fan_out, layer.out_positions)
         else:
@@ -82,27 +90,56 @@ def pipeline_latency(lat: np.ndarray) -> np.ndarray:
     return finish_prev_layer[T - 1]
 
 
+def _ceil_div(a, b):
+    return -(-a // b)
+
+
 def latency_cycles(cfg: AcceleratorConfig, counts: Sequence[np.ndarray],
-                   lhr_matrix: np.ndarray | None = None) -> np.ndarray:
+                   lhr_matrix: np.ndarray | None = None,
+                   mem_blocks_matrix: np.ndarray | None = None,
+                   penc_width: np.ndarray | None = None) -> np.ndarray:
     """Per-inference latency.
 
     ``counts``: per-layer incoming spike counts, each (T,) or (T, ...) —
     entry ``l`` is the traffic entering layer ``l``.
     ``lhr_matrix``: optional (C, L) int array — evaluates C candidate LHR
     vectors at once (vectorised DSE); result shape (..., C) or (C,).
+    ``mem_blocks_matrix``: optional (C, L) int array of memory blocks per
+    layer (0 = one block per NU).  Port contention is recomputed per
+    candidate from the *candidate's* NU count, so joint LHR x mem_blocks
+    sweeps stay consistent with the scalar ``with_lhr`` path.
+    ``penc_width``: optional (C,) or (C, L) PENC chunk widths.
     """
     L = len(cfg.layers)
     assert len(counts) == L, (len(counts), L)
-    T = np.asarray(counts[0]).shape[0]
+    batched = any(x is not None
+                  for x in (lhr_matrix, mem_blocks_matrix, penc_width))
     lat = []
     for l, layer in enumerate(cfg.layers):
         c = np.asarray(counts[l], dtype=np.float64)
-        if lhr_matrix is not None:
-            c = c.reshape(c.shape + (1,) * 1)           # (T, ..., 1)
-            lhr = np.asarray(lhr_matrix[:, l])           # (C,)
-            lat.append(layer_latency(layer, c, cfg.timing, lhr=lhr))
-        else:
+        if not batched:
             lat.append(layer_latency(layer, c, cfg.timing))
+            continue
+        c = c.reshape(c.shape + (1,))                    # (T, ..., 1)
+        lhr_l = per_layer_col(lhr_matrix, l)            # (C,) or None
+        mem_l = per_layer_col(mem_blocks_matrix, l)
+        pw_l = per_layer_col(penc_width, l)
+        contention = None
+        if lhr_l is not None or mem_l is not None:
+            lhr_v = np.asarray(layer.lhr if lhr_l is None else lhr_l,
+                               dtype=np.int64)
+            mem_v = np.asarray(layer.mem_blocks if mem_l is None else mem_l,
+                               dtype=np.int64)
+            nus = _ceil_div(layer.logical, lhr_v)
+            contention = _ceil_div(nus, np.where(mem_v > 0, mem_v, nus))
+        pchunks = (None if pw_l is None
+                   else _ceil_div(layer.fan_in_size,
+                                  np.asarray(pw_l, dtype=np.int64)))
+        lat.append(layer_latency(layer, c, cfg.timing, lhr=lhr_l,
+                                 contention=contention, penc_chunks=pchunks))
+    if batched:
+        shape = np.broadcast_shapes(*[x.shape for x in lat])
+        lat = [np.broadcast_to(x, shape) for x in lat]
     lat = np.stack(lat, axis=0)                          # (L, T, ...)
     return pipeline_latency(lat)
 

@@ -20,7 +20,8 @@ import math
 
 import numpy as np
 
-from repro.core.accelerator.arch import AcceleratorConfig, LayerHW
+from repro.core.accelerator.arch import (AcceleratorConfig, LayerHW,
+                                         per_layer_col)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,18 +87,67 @@ def estimate(cfg: AcceleratorConfig, lib: CostLibrary = CostLibrary()) -> Resour
     return total
 
 
+@dataclasses.dataclass(frozen=True)
+class ResourcesVector:
+    """Per-candidate resource columns for a batch of C designs."""
+    lut: np.ndarray                  # (C,) float
+    reg: np.ndarray                  # (C,) float
+    bram36: np.ndarray               # (C,) int
+    dsp: np.ndarray                  # (C,) int
+
+
+def estimate_vector(cfg: AcceleratorConfig,
+                    lhr_matrix: np.ndarray | None = None,
+                    mem_blocks_matrix: np.ndarray | None = None,
+                    weight_bits: np.ndarray | None = None,
+                    penc_width: np.ndarray | None = None,
+                    lib: CostLibrary = CostLibrary()) -> ResourcesVector:
+    """Vectorised resource estimate over C candidate designs (DSE).
+
+    Per-layer matrices are (C, L); ``weight_bits``/``penc_width`` may also be
+    (C,) globals.  Any ``None`` axis falls back to the config's own values,
+    so the result matches ``estimate`` row-for-row on materialized configs.
+    """
+    given = [a for a in (lhr_matrix, mem_blocks_matrix, weight_bits,
+                         penc_width) if a is not None]
+    if not given:
+        raise ValueError("estimate_vector needs at least one candidate axis; "
+                         "use estimate() for a single config")
+    n = len(np.asarray(given[0]))
+    lut = np.zeros(n)
+    reg = np.zeros(n)
+    bram = np.zeros(n, dtype=np.int64)
+    dsp = np.zeros(n)
+    for l, layer in enumerate(cfg.layers):
+        lhr_l = per_layer_col(lhr_matrix, l)
+        nus = (np.ceil(layer.logical / np.asarray(lhr_l, np.float64))
+               if lhr_l is not None else np.float64(layer.num_nus))
+        mem_l = per_layer_col(mem_blocks_matrix, l)
+        if mem_l is None:
+            mem = layer.mem_blocks if layer.mem_blocks else nus
+        else:
+            mem_l = np.asarray(mem_l, np.float64)
+            mem = np.where(mem_l > 0, mem_l, nus)
+        pw_l = per_layer_col(penc_width, l)
+        pw = layer.penc_width if pw_l is None else pw_l
+        wb_l = per_layer_col(weight_bits, l)
+        wb = layer.weight_bits if wb_l is None else np.asarray(wb_l, np.int64)
+        lut_nu = lib.lut_per_conv_nu if layer.kind == "conv" else lib.lut_per_nu
+        reg_nu = lib.reg_per_conv_nu if layer.kind == "conv" else lib.reg_per_nu
+        lut += (lut_nu * nus + lib.lut_per_penc_bit * pw
+                + lib.lut_per_mem_block * mem + lib.lut_fixed_per_layer)
+        reg += (reg_nu * nus + layer.fan_in_size * lib.reg_per_addr_bit
+                + lib.reg_fixed_per_layer)
+        bram += np.maximum(-(-(layer.synapses * wb) // lib.bram36_bits), 1)
+        dsp += nus
+    return ResourcesVector(lut=lut, reg=reg, bram36=bram,
+                           dsp=dsp.astype(np.int64))
+
+
 def estimate_lut_vector(cfg: AcceleratorConfig, lhr_matrix: np.ndarray,
                         lib: CostLibrary = CostLibrary()) -> np.ndarray:
     """Vectorised LUT estimate over (C, L) candidate LHR matrices (DSE)."""
-    lhr = np.asarray(lhr_matrix, dtype=np.float64)
-    lut = np.zeros(lhr.shape[0])
-    for l, layer in enumerate(cfg.layers):
-        nus = np.ceil(layer.logical / lhr[:, l])
-        mem = layer.mem_blocks if layer.mem_blocks else nus
-        lut_nu = lib.lut_per_conv_nu if layer.kind == "conv" else lib.lut_per_nu
-        lut += (lut_nu * nus + lib.lut_per_penc_bit * layer.penc_width
-                + lib.lut_per_mem_block * mem + lib.lut_fixed_per_layer)
-    return lut
+    return estimate_vector(cfg, lhr_matrix=lhr_matrix, lib=lib).lut
 
 
 def accumulate_ops(cfg: AcceleratorConfig, counts) -> float:
@@ -118,3 +168,48 @@ def energy_mj(cfg: AcceleratorConfig, counts, cycles: float,
     runtime_s = cycles / (cfg.timing.clock_mhz * 1e6)
     power_w = lib.static_w + lib.w_per_lut * res.lut
     return (power_w * runtime_s + lib.pj_per_acc_op * 1e-12 * accumulate_ops(cfg, counts)) * 1e3
+
+
+def accumulate_ops_vector(cfg: AcceleratorConfig, counts,
+                          lhr_matrix: np.ndarray | None = None) -> np.ndarray:
+    """Vectorised ``accumulate_ops`` over (C, L) candidate LHR matrices.
+
+    FC work per spike is ``lhr * ceil(logical / lhr)`` (each NU walks its
+    owned neurons), so it varies with the candidate; conv work is
+    LHR-independent.
+    """
+    if lhr_matrix is None:
+        return np.asarray(accumulate_ops(cfg, counts))
+    lhr = np.asarray(lhr_matrix, dtype=np.int64)
+    ops = np.zeros(lhr.shape[0])
+    for l, (layer, c) in enumerate(zip(cfg.layers, counts)):
+        csum = float(np.asarray(c, dtype=np.float64).sum())
+        if layer.kind == "fc":
+            per_spike = lhr[:, l] * -(-layer.logical // lhr[:, l])
+        else:
+            per_spike = layer.kernel ** 2 * layer.logical
+        ops += csum * per_spike
+    return ops
+
+
+def energy_mj_vector(cfg: AcceleratorConfig, counts, cycles: np.ndarray,
+                     lhr_matrix: np.ndarray | None = None,
+                     lut: np.ndarray | None = None,
+                     clock_mhz: np.ndarray | None = None,
+                     lib: CostLibrary = CostLibrary()) -> np.ndarray:
+    """Vectorised ``energy_mj`` over C candidates.
+
+    ``cycles``: (C,) latencies (from the batched cycle model).  ``lut`` can
+    be passed to reuse an ``estimate_vector`` result; ``clock_mhz`` is a
+    (C,) per-candidate clock axis (defaults to the config's clock).
+    """
+    cycles = np.asarray(cycles, dtype=np.float64)
+    clk = np.asarray(cfg.timing.clock_mhz if clock_mhz is None else clock_mhz,
+                     dtype=np.float64)
+    runtime_s = cycles / (clk * 1e6)
+    if lut is None:
+        lut = (estimate_vector(cfg, lhr_matrix=lhr_matrix, lib=lib).lut
+               if lhr_matrix is not None else estimate(cfg, lib).lut)
+    power_w = lib.static_w + lib.w_per_lut * lut
+    ops = accumulate_ops_vector(cfg, counts, lhr_matrix)
+    return (power_w * runtime_s + lib.pj_per_acc_op * 1e-12 * ops) * 1e3

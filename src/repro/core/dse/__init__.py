@@ -1,0 +1,84 @@
+"""Design Space Exploration subsystem (paper Sec. IV), unified + streaming.
+
+The paper's contribution is *joint* exploration of hardware and model
+parameters.  This package turns the seed's single-axis LHR sweep into a
+vectorized multi-axis search engine:
+
+* ``space``      — declarative ``SearchSpace``: per-layer LHR, per-layer
+                   memory blocks, weight precision, PENC width, clock, as
+                   independent / zipped / global axes over an
+                   ``AcceleratorConfig``.  Nothing is materialized; chunks
+                   of flat indices decode to column arrays on demand.
+* ``table``      — ``CandidateTable``: structure-of-arrays storage (NumPy
+                   columns for cycles/LUT/REG/BRAM/DSP/energy), no
+                   per-candidate Python objects.
+* ``evaluate``   — one vectorised call per chunk through the batched cycle
+                   model and component library.
+* ``pareto``     — k-objective Pareto mask + chunk-incremental frontier
+                   merge, so arbitrarily large spaces stream in the memory
+                   of a single chunk.
+* ``strategies`` — exhaustive ``GridSearch``, ``RandomSearch`` sampling, and
+                   a simple ``EvolutionarySearch`` for spaces too big to
+                   enumerate.
+* ``engine``     — ``search``/``SearchResult``/``auto_select`` tying it all
+                   together.
+* ``compat``     — the seed API (``sweep``, ``sweep_memory_blocks``,
+                   ``sweep_weight_bits``, ``Candidate``/``DSEResult``) as
+                   thin wrappers over the new engine.
+
+How to define a search space
+----------------------------
+::
+
+    from repro.core import dse
+    from repro.core.accelerator import paper_nets
+
+    cfg = paper_nets.build("net-1")
+    counts = paper_nets.paper_counts("net-1", cfg)
+
+    space = (dse.SearchSpace(cfg)
+             # per-layer LHR: independent power-of-two options per layer
+             .add_per_layer("lhr", [dse.pow2_values(min(64, l.logical))
+                                    for l in cfg.layers])
+             # memory blocks: all layers move together (zipped options)
+             .add_joint("mem_blocks",
+                        [tuple(max(1, l.num_nus // d) for l in cfg.layers)
+                         for d in (1, 2, 4)])
+             # weight precision: one global value per candidate
+             .add_global("weight_bits", (4, 6, 8)))
+
+    result = dse.search(cfg, counts, space,
+                        objectives=("cycles", "lut", "bram", "energy"))
+    print(result.n_evaluated, len(result.frontier))
+    best = result.best_within_latency(max_cycles=2e4)   # row dict
+    hw = result.config_for(best)                        # AcceleratorConfig
+
+Spaces past the old 200k cap stream through chunked evaluation — memory
+stays flat and the frontier merge is exact (see tests/test_dse.py).  For
+spaces too large to enumerate, pass ``strategy=dse.RandomSearch(100_000)``
+or ``dse.EvolutionarySearch()``.  See DESIGN.md §8 and
+``examples/train_snn_dse.py`` for the full walkthrough.
+"""
+from repro.core.dse.compat import (Candidate, DSEResult, MemBlockCandidate,
+                                   lhr_grid, sweep, sweep_memory_blocks,
+                                   sweep_spike_train_length,
+                                   sweep_weight_bits)
+from repro.core.dse.engine import (DEFAULT_OBJECTIVES, SearchResult,
+                                   auto_select, search)
+from repro.core.dse.evaluate import METRICS, evaluate_columns
+from repro.core.dse.pareto import (ParetoAccumulator, any_dominates,
+                                   frontier_of, pareto_mask, pareto_mask_k)
+from repro.core.dse.space import Axis, SearchSpace, pow2_values
+from repro.core.dse.strategies import (EvolutionarySearch, GridSearch,
+                                       RandomSearch)
+from repro.core.dse.table import CandidateTable
+
+__all__ = [
+    "Axis", "Candidate", "CandidateTable", "DEFAULT_OBJECTIVES", "DSEResult",
+    "EvolutionarySearch", "GridSearch", "METRICS", "MemBlockCandidate",
+    "ParetoAccumulator", "RandomSearch", "SearchResult", "SearchSpace",
+    "any_dominates", "auto_select", "evaluate_columns", "frontier_of",
+    "lhr_grid", "pareto_mask", "pareto_mask_k", "pow2_values", "search",
+    "sweep", "sweep_memory_blocks", "sweep_spike_train_length",
+    "sweep_weight_bits",
+]

@@ -1,11 +1,10 @@
-"""Design Space Exploration engine (paper Sec. IV).
+"""Legacy DSE API, rewired as thin wrappers over the streaming engine.
 
-Enumerates per-layer LHR vectors (powers of two, the paper's sweep style),
-evaluates latency via the cycle-accurate model and area via the component
-library *vectorised over all candidates at once*, and extracts the Pareto
-frontier over (LUT, cycles).  ``auto_select`` reproduces the paper's
-"best mapping" picks: the smallest design within a latency budget, or the
-fastest within an area budget.
+The seed engine's entry points (``sweep``, ``sweep_memory_blocks``,
+``sweep_weight_bits``, ``lhr_grid``, ``Candidate``/``DSEResult``) keep their
+exact signatures and numerics, but every evaluation now runs through the
+chunked vectorised path — no per-candidate ``with_lhr`` materialization or
+scalar ``energy_mj`` calls remain.
 """
 from __future__ import annotations
 
@@ -15,8 +14,12 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.accelerator.arch import AcceleratorConfig
 from repro.core.accelerator import cycle_model, resources
+from repro.core.accelerator.arch import AcceleratorConfig
+from repro.core.dse.engine import search
+from repro.core.dse.evaluate import evaluate_columns
+from repro.core.dse.pareto import pareto_mask
+from repro.core.dse.space import SearchSpace, pow2_values
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,52 +54,48 @@ class DSEResult:
 
 def lhr_grid(cfg: AcceleratorConfig, max_lhr: int = 256,
              max_candidates: int = 200_000) -> np.ndarray:
-    """All per-layer power-of-two LHR vectors (capped at layer size)."""
-    axes = []
-    for layer in cfg.layers:
-        cap = min(max_lhr, layer.logical)
-        vals = [1]
-        while vals[-1] * 2 <= cap:
-            vals.append(vals[-1] * 2)
-        axes.append(vals)
+    """All per-layer power-of-two LHR vectors (capped at layer size).
+
+    Materializes the full (C, L) matrix, so it keeps the seed's candidate
+    cap; for larger spaces build a ``SearchSpace`` and stream through
+    ``search`` instead — there is no cap on that path.
+    """
+    axes = [pow2_values(min(max_lhr, layer.logical)) for layer in cfg.layers]
     n = int(np.prod([len(a) for a in axes]))
     if n > max_candidates:
         raise ValueError(f"{n} candidates exceed cap {max_candidates}; "
-                         f"restrict max_lhr or sweep layerwise")
+                         f"restrict max_lhr, sweep layerwise, or stream via "
+                         f"dse.search(SearchSpace.product_lhr(cfg))")
     return np.array(list(itertools.product(*axes)), dtype=np.int64)
-
-
-def pareto_mask(cycles: np.ndarray, lut: np.ndarray) -> np.ndarray:
-    """Non-dominated mask for minimizing both objectives."""
-    order = np.lexsort((lut, cycles))           # by cycles, then lut
-    mask = np.zeros(len(cycles), dtype=bool)
-    best_lut = np.inf
-    for i in order:
-        if lut[i] < best_lut - 1e-9:
-            mask[i] = True
-            best_lut = lut[i]
-    return mask
 
 
 def sweep(cfg: AcceleratorConfig, counts: Sequence[np.ndarray],
           max_lhr: int = 256,
-          lhr_matrix: Optional[np.ndarray] = None) -> DSEResult:
+          lhr_matrix: Optional[np.ndarray] = None,
+          chunk_size: int = 65536) -> DSEResult:
     """Evaluate every candidate LHR vector against a spike trace.
 
     ``counts``: per-layer (T,) traffic (trace or published averages).
+    Evaluation is chunked and fully vectorised (including energy); the
+    returned per-candidate object list is only built at the end, for
+    compatibility.
     """
-    lhr = lhr_matrix if lhr_matrix is not None else lhr_grid(cfg, max_lhr)
-    cycles = cycle_model.latency_cycles(cfg, counts, lhr_matrix=lhr)
-    lut = resources.estimate_lut_vector(cfg, lhr)
+    lhr = np.asarray(lhr_matrix if lhr_matrix is not None
+                     else lhr_grid(cfg, max_lhr), dtype=np.int64)
+    n = len(lhr)
+    cycles = np.empty(n)
+    lut = np.empty(n)
+    energy = np.empty(n)
+    for s in range(0, n, chunk_size):
+        m = evaluate_columns(cfg, counts, {"lhr": lhr[s:s + chunk_size]})
+        cycles[s:s + chunk_size] = m["cycles"]
+        lut[s:s + chunk_size] = m["lut"]
+        energy[s:s + chunk_size] = m["energy"]
     mask = pareto_mask(cycles, lut)
-    cands = []
-    for i in range(len(lhr)):
-        c = cfg.with_lhr(tuple(int(x) for x in lhr[i]))
-        cands.append(Candidate(
-            lhr=tuple(int(x) for x in lhr[i]),
-            cycles=float(cycles[i]), lut=float(lut[i]),
-            energy_mj=resources.energy_mj(c, counts, float(cycles[i])),
-            pareto=bool(mask[i])))
+    cands = [Candidate(lhr=tuple(int(x) for x in lhr[i]),
+                       cycles=float(cycles[i]), lut=float(lut[i]),
+                       energy_mj=float(energy[i]), pareto=bool(mask[i]))
+             for i in range(n)]
     return DSEResult(config=cfg, candidates=cands)
 
 
@@ -127,21 +126,20 @@ def sweep_memory_blocks(cfg: AcceleratorConfig, counts: Sequence[np.ndarray],
     made to the hardware configuration (e.g. ... reduce the memory blocks)").
 
     Fewer blocks than NUs serialize weight reads (``LayerHW.contention``)
-    but shrink the BRAM + mapping-logic budget; the sweep exposes the
-    latency/area trade at fixed LHR.
+    but shrink the BRAM + mapping-logic budget.  A thin wrapper: one joint
+    ``mem_blocks`` axis through the streaming engine.
     """
-    out = []
-    for div in divisors:
-        layers = tuple(
-            dataclasses.replace(l, mem_blocks=max(1, l.num_nus // div))
-            for l in cfg.layers)
-        c = dataclasses.replace(cfg, layers=layers)
-        cycles = float(cycle_model.latency_cycles(c, counts))
-        res = resources.estimate(c)
-        out.append(MemBlockCandidate(
-            blocks=tuple(l.num_mem_blocks for l in layers),
-            cycles=cycles, lut=res.lut, bram=res.bram36))
-    return out
+    options = [tuple(max(1, layer.num_nus // d) for layer in cfg.layers)
+               for d in divisors]
+    space = SearchSpace(cfg).add_joint("mem_blocks", options)
+    res = search(cfg, counts, space=space,
+                 objectives=("cycles", "lut", "bram"), keep_all=True)
+    t = res.table
+    return [MemBlockCandidate(
+        blocks=tuple(int(x) for x in t.columns["mem_blocks"][i]),
+        cycles=float(t.columns["cycles"][i]),
+        lut=float(t.columns["lut"][i]),
+        bram=int(t.columns["bram"][i])) for i in range(len(t))]
 
 
 def sweep_weight_bits(cfg: AcceleratorConfig,
@@ -150,11 +148,8 @@ def sweep_weight_bits(cfg: AcceleratorConfig,
     """BRAM footprint vs synapse weight precision (paper Sec. III notes
     weight quantization "significantly affects the system's memory
     requirements").  Accuracy impact is measured separately with the
-    fixed-point validator (benchmarks/bench_extensions.py)."""
-    out = {}
-    for bits in bits_options:
-        layers = tuple(dataclasses.replace(l, weight_bits=bits)
-                       for l in cfg.layers)
-        out[bits] = resources.estimate(
-            dataclasses.replace(cfg, layers=layers)).bram36
-    return out
+    fixed-point validator (``validate.quantized_accuracy``).  A thin
+    wrapper over the batched resource path."""
+    bits = np.asarray(bits_options, dtype=np.int64)
+    bram = resources.estimate_vector(cfg, weight_bits=bits).bram36
+    return {int(b): int(r) for b, r in zip(bits, bram)}

@@ -1,0 +1,150 @@
+"""Streaming search engine: strategy -> chunked evaluation -> Pareto merge.
+
+``search`` never materializes the space: each chunk of candidates flows
+through the vectorised evaluator into the incremental Pareto accumulator,
+so a multi-million-point joint space runs in the memory of one chunk.  Pass
+``keep_all=True`` on small spaces to retain the full metric table (the
+legacy ``sweep`` behaviour).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.accelerator import resources
+from repro.core.accelerator.arch import AcceleratorConfig
+from repro.core.dse.evaluate import METRICS, evaluate_columns
+from repro.core.dse.pareto import ParetoAccumulator
+from repro.core.dse.space import SearchSpace
+from repro.core.dse.strategies import GridSearch
+from repro.core.dse.table import CandidateTable
+
+DEFAULT_OBJECTIVES = ("cycles", "lut", "bram", "energy")
+
+
+@dataclasses.dataclass
+class SearchResult:
+    config: AcceleratorConfig
+    space: SearchSpace
+    objectives: tuple[str, ...]
+    frontier: CandidateTable          # Pareto-optimal rows (streamed merge)
+    n_evaluated: int
+    table: Optional[CandidateTable] = None    # all rows iff keep_all
+
+    def _rows(self, needed: Sequence[str]) -> CandidateTable:
+        """Full table when kept; else the frontier — which is only a valid
+        search set when every queried column was a search objective (a
+        non-objective optimum may live off-frontier)."""
+        if self.table is not None:
+            return self.table
+        missing = [c for c in needed if c not in self.objectives]
+        if missing:
+            raise ValueError(
+                f"columns {missing} were not search objectives "
+                f"{self.objectives}; the retained frontier is only optimal "
+                f"over the objectives — re-search with them included, or "
+                f"with keep_all=True")
+        return self.frontier
+
+    def best_under(self, minimize: str, **caps: float) -> Optional[dict]:
+        """Row minimizing ``minimize`` among rows with col <= cap for every
+        kwarg — e.g. ``best_under("lut", cycles=20e3)``."""
+        t = self._rows((minimize, *caps))
+        if len(t) == 0:
+            return None
+        ok = np.ones(len(t), dtype=bool)
+        for col, cap in caps.items():
+            ok &= np.asarray(t.columns[col], np.float64) <= cap
+        if not ok.any():
+            return None
+        sub = t.take(ok)
+        return sub.row(sub.argmin(minimize))
+
+    def best_within_latency(self, max_cycles: float) -> Optional[dict]:
+        return self.best_under("lut", cycles=max_cycles)
+
+    def best_within_area(self, max_lut: float) -> Optional[dict]:
+        return self.best_under("cycles", lut=max_lut)
+
+    def min_energy(self) -> Optional[dict]:
+        t = self._rows(("energy",))
+        return t.row(t.argmin("energy")) if len(t) else None
+
+    def config_for(self, row: dict) -> AcceleratorConfig:
+        """Materialize a result row as a concrete AcceleratorConfig."""
+        return self.config.with_updates(
+            lhr=row.get("lhr"), mem_blocks=row.get("mem_blocks"),
+            weight_bits=row.get("weight_bits"),
+            penc_width=row.get("penc_width"),
+            clock_mhz=row.get("clock_mhz"))
+
+
+def search(cfg: AcceleratorConfig, counts: Sequence[np.ndarray],
+           space: Optional[SearchSpace] = None,
+           strategy: Union[str, object] = "grid",
+           objectives: Sequence[str] = DEFAULT_OBJECTIVES,
+           chunk_size: int = 65536,
+           keep_all: bool = False,
+           lib: Optional[resources.CostLibrary] = None) -> SearchResult:
+    """Explore ``space`` (default: the per-layer LHR power-of-two product).
+
+    ``objectives`` name metric columns (any of ``evaluate.METRICS``) to
+    minimize jointly; the frontier is their k-objective Pareto set, merged
+    incrementally across evaluation chunks.
+    """
+    space = space if space is not None else SearchSpace.product_lhr(cfg)
+    if not space.axes:
+        raise ValueError("search space has no axes")
+    for obj in objectives:
+        if obj not in METRICS:
+            raise ValueError(f"unknown objective {obj!r}; pick from {METRICS}")
+    if isinstance(strategy, str):
+        if strategy != "grid":
+            raise ValueError(f"unknown strategy name {strategy!r}; pass a "
+                             f"strategy instance for non-grid search")
+        strategy = GridSearch(chunk_size)
+
+    acc = ParetoAccumulator(objectives)
+    kept: Optional[list[CandidateTable]] = [] if keep_all else None
+
+    def evaluate(cols: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+        metrics = evaluate_columns(cfg, counts, cols, lib=lib)
+        chunk = CandidateTable({**cols, **metrics})
+        acc.update(chunk)
+        if kept is not None:
+            kept.append(chunk)
+        return metrics
+
+    n = strategy.run(space, evaluate, tuple(objectives))
+    table = CandidateTable.concat(kept) if kept is not None else None
+    return SearchResult(config=cfg, space=space, objectives=tuple(objectives),
+                        frontier=acc.frontier, n_evaluated=n, table=table)
+
+
+def auto_select(cfg: AcceleratorConfig, counts: Sequence[np.ndarray],
+                max_cycles: Optional[float] = None,
+                max_lut: Optional[float] = None,
+                space: Optional[SearchSpace] = None,
+                **kw) -> Optional[tuple[AcceleratorConfig, dict]]:
+    """The paper's "best mapping" picks over an arbitrary search space:
+    smallest design within a latency budget (``max_cycles``), fastest within
+    an area budget (``max_lut``), or minimum energy when no budget is given.
+    Returns (materialized config, result row) or None if no design fits."""
+    result = search(cfg, counts, space=space,
+                    objectives=("cycles", "lut", "energy"), **kw)
+    caps = {}
+    if max_cycles is not None:
+        caps["cycles"] = max_cycles
+    if max_lut is not None:
+        caps["lut"] = max_lut
+    if max_cycles is not None:
+        row = result.best_under("lut", **caps)
+    elif max_lut is not None:
+        row = result.best_under("cycles", **caps)
+    else:
+        row = result.min_energy()
+    if row is None:
+        return None
+    return result.config_for(row), row

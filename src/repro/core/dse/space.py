@@ -1,0 +1,192 @@
+"""Declarative search space over hardware *and* model parameters.
+
+A ``SearchSpace`` is an ordered list of axes over an ``AcceleratorConfig``.
+Three axis shapes cover the paper's DSE dimensions plus the joint sweeps the
+seed engine could not express:
+
+* **per-layer scalar** — one axis per layer, independent options
+  (``add_per_layer("lhr", [[1,2,4], [1,2], ...])``); the Cartesian product
+  explores every per-layer combination, exactly like the seed ``lhr_grid``.
+* **joint (zipped) vector** — one axis whose options are whole per-layer
+  vectors (``add_joint("mem_blocks", [(64,32,16), (32,16,8)])``); all layers
+  move together, the seed ``sweep_memory_blocks`` pattern.
+* **global scalar** — one value applied everywhere
+  (``add_global("weight_bits", (4, 6, 8))`` or ``add_global("clock_mhz", …)``).
+
+The full space is the Cartesian product of all axes (last axis fastest,
+matching ``itertools.product``).  Nothing is ever materialized: ``decode``
+turns a chunk of flat candidate indices into column arrays by mixed-radix
+digit extraction, so a billion-point space streams through fixed memory.
+
+Known axis names and where they act:
+
+  ``lhr``          per layer — NU count (latency, LUT/REG/DSP, energy)
+  ``mem_blocks``   per layer — port contention vs BRAM mapping logic
+  ``weight_bits``  per layer or global — BRAM footprint (accuracy measured
+                   separately via ``validate.quantized_accuracy``)
+  ``penc_width``   per layer or global — PENC scan cycles vs encoder LUTs
+  ``clock_mhz``    global — runtime/energy scaling
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.accelerator.arch import AcceleratorConfig
+
+# per-layer defaults pulled from the base config when an axis doesn't cover
+# a layer (or doesn't exist at all)
+_PER_LAYER_DEFAULTS = {
+    "lhr": lambda layer: layer.lhr,
+    "mem_blocks": lambda layer: layer.mem_blocks,
+    "weight_bits": lambda layer: layer.weight_bits,
+    "penc_width": lambda layer: layer.penc_width,
+}
+
+
+def pow2_values(cap: int) -> list[int]:
+    """[1, 2, 4, ...] up to ``cap`` — the paper's LHR sweep style."""
+    vals = [1]
+    while vals[-1] * 2 <= cap:
+        vals.append(vals[-1] * 2)
+    return vals
+
+
+@dataclasses.dataclass(frozen=True)
+class Axis:
+    name: str
+    values: tuple                 # scalars, or length-L tuples (joint axis)
+    layer: int | None = None      # index for per-layer scalar axes
+
+    def __post_init__(self):
+        if not self.values:
+            raise ValueError(f"axis {self.name!r} has no values")
+        if self.is_vector:
+            if self.layer is not None:
+                raise ValueError(f"joint axis {self.name!r} cannot bind to "
+                                 f"a single layer")
+            lens = {len(v) for v in self.values}
+            if len(lens) != 1:
+                raise ValueError(f"joint axis {self.name!r} has ragged "
+                                 f"options: {lens}")
+
+    @property
+    def is_vector(self) -> bool:
+        return isinstance(self.values[0], (tuple, list, np.ndarray))
+
+    @property
+    def cardinality(self) -> int:
+        return len(self.values)
+
+
+class SearchSpace:
+    def __init__(self, config: AcceleratorConfig, axes: Sequence[Axis] = ()):
+        self.config = config
+        self.axes: list[Axis] = []
+        for ax in axes:
+            self._append(ax)
+
+    # ---- construction (fluent) -------------------------------------------
+    def _append(self, axis: Axis) -> None:
+        for ax in self.axes:
+            if ax.name != axis.name:
+                continue
+            if ax.is_vector or axis.is_vector or ax.layer is None \
+                    or axis.layer is None or ax.layer == axis.layer:
+                raise ValueError(
+                    f"axis {axis.name!r} conflicts with an existing axis of "
+                    f"the same name (only distinct per-layer bindings may "
+                    f"share a name)")
+        if axis.layer is not None and not (
+                0 <= axis.layer < len(self.config.layers)):
+            raise ValueError(f"axis {axis.name!r}: layer {axis.layer} out of "
+                             f"range for {len(self.config.layers)} layers")
+        self.axes.append(axis)
+
+    def add_per_layer(self, name: str,
+                      values_per_layer: Sequence[Sequence]) -> "SearchSpace":
+        """One independent scalar axis per layer (Cartesian across layers)."""
+        if len(values_per_layer) != len(self.config.layers):
+            raise ValueError(f"{name}: {len(values_per_layer)} value lists "
+                             f"for {len(self.config.layers)} layers")
+        for i, vals in enumerate(values_per_layer):
+            self._append(Axis(name, tuple(vals), layer=i))
+        return self
+
+    def add_joint(self, name: str, options: Sequence[Sequence]) -> "SearchSpace":
+        """One axis whose options are whole per-layer vectors (zipped)."""
+        opts = tuple(tuple(o) for o in options)
+        for o in opts:
+            if len(o) != len(self.config.layers):
+                raise ValueError(f"{name}: option {o} has {len(o)} entries "
+                                 f"for {len(self.config.layers)} layers")
+        self._append(Axis(name, opts))
+        return self
+
+    def add_global(self, name: str, values: Sequence) -> "SearchSpace":
+        self._append(Axis(name, tuple(values)))
+        return self
+
+    @classmethod
+    def product_lhr(cls, config: AcceleratorConfig,
+                    max_lhr: int = 256) -> "SearchSpace":
+        """Per-layer power-of-two LHR product — the seed ``lhr_grid`` space."""
+        return cls(config).add_per_layer(
+            "lhr", [pow2_values(min(max_lhr, l.logical))
+                    for l in config.layers])
+
+    # ---- geometry ---------------------------------------------------------
+    @property
+    def size(self) -> int:
+        n = 1
+        for ax in self.axes:
+            n *= ax.cardinality          # python int: no overflow
+        return n if self.axes else 0
+
+    # ---- decoding ---------------------------------------------------------
+    def digits(self, flat_idx: np.ndarray) -> np.ndarray:
+        """Mixed-radix digits (n, n_axes), last axis fastest."""
+        idx = np.asarray(flat_idx, dtype=np.int64)
+        out = np.empty((len(idx), len(self.axes)), dtype=np.int64)
+        stride = 1
+        for a in range(len(self.axes) - 1, -1, -1):
+            card = self.axes[a].cardinality
+            out[:, a] = (idx // stride) % card
+            stride *= card
+        return out
+
+    def sample_digits(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        """Uniform random digit matrix — valid even for spaces past 2^63."""
+        return np.stack([rng.integers(ax.cardinality, size=n)
+                         for ax in self.axes], axis=1)
+
+    def assemble(self, digits: np.ndarray) -> dict[str, np.ndarray]:
+        """Digit matrix -> named column arrays, filling config defaults for
+        layers no axis covers."""
+        n = len(digits)
+        n_layers = len(self.config.layers)
+        cols: dict[str, np.ndarray] = {}
+        for a, ax in enumerate(self.axes):
+            vals = np.asarray(ax.values)
+            picked = vals[digits[:, a]]              # (n,) or (n, L)
+            if ax.is_vector:
+                cols[ax.name] = picked
+            elif ax.layer is None:
+                cols[ax.name] = picked
+            else:
+                if ax.name not in cols:
+                    default = _PER_LAYER_DEFAULTS.get(ax.name)
+                    if default is None:
+                        raise ValueError(f"no per-layer default for axis "
+                                         f"{ax.name!r}")
+                    base = [default(l) for l in self.config.layers]
+                    cols[ax.name] = np.tile(
+                        np.asarray(base, dtype=vals.dtype), (n, 1))
+                cols[ax.name][:, ax.layer] = picked
+        return cols
+
+    def decode(self, flat_idx: np.ndarray) -> dict[str, np.ndarray]:
+        """Chunk of flat candidate indices -> column arrays."""
+        return self.assemble(self.digits(flat_idx))

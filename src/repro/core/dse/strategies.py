@@ -1,0 +1,99 @@
+"""Pluggable search strategies.
+
+A strategy decides *which* candidates to evaluate; the engine owns the
+streaming evaluation and the incremental Pareto merge.  The contract is
+
+    run(space, evaluate, objectives) -> number of candidates evaluated
+
+where ``evaluate(cols)`` takes axis columns (from ``space.decode`` /
+``space.assemble``) and returns the metric columns, after feeding them to
+the Pareto accumulator.
+
+* ``GridSearch``         — exhaustive, chunked; any space size streams in
+                           fixed memory.
+* ``RandomSearch``       — uniform i.i.d. samples, for spaces too large to
+                           enumerate (works past 2^63 candidates: sampling
+                           is per-axis digits, never a flat index).
+* ``EvolutionarySearch`` — (mu + lambda)-style loop: parents are the chunk's
+                           non-dominated set padded by normalized-sum rank;
+                           children come from uniform crossover plus
+                           per-gene random-reset mutation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.dse.pareto import pareto_mask_k
+from repro.core.dse.space import SearchSpace
+
+
+class GridSearch:
+    def __init__(self, chunk_size: int = 65536):
+        if chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        self.chunk_size = chunk_size
+
+    def run(self, space: SearchSpace, evaluate, objectives) -> int:
+        total = space.size
+        if total >= 2 ** 62:
+            raise ValueError(f"{total} candidates cannot be enumerated; "
+                             f"use RandomSearch or EvolutionarySearch")
+        for start in range(0, total, self.chunk_size):
+            stop = min(start + self.chunk_size, total)
+            evaluate(space.decode(np.arange(start, stop, dtype=np.int64)))
+        return total
+
+
+class RandomSearch:
+    def __init__(self, n_samples: int, seed: int = 0,
+                 chunk_size: int = 65536):
+        self.n_samples = n_samples
+        self.seed = seed
+        self.chunk_size = chunk_size
+
+    def run(self, space: SearchSpace, evaluate, objectives) -> int:
+        rng = np.random.default_rng(self.seed)
+        done = 0
+        while done < self.n_samples:
+            m = min(self.chunk_size, self.n_samples - done)
+            evaluate(space.assemble(space.sample_digits(rng, m)))
+            done += m
+        return done
+
+
+class EvolutionarySearch:
+    def __init__(self, population: int = 128, generations: int = 16,
+                 seed: int = 0, mutation_rate: float | None = None):
+        if population < 4:
+            raise ValueError("population must be >= 4")
+        self.population = population
+        self.generations = generations
+        self.seed = seed
+        self.mutation_rate = mutation_rate
+
+    def run(self, space: SearchSpace, evaluate, objectives) -> int:
+        rng = np.random.default_rng(self.seed)
+        n_axes = len(space.axes)
+        mut_p = self.mutation_rate or 1.0 / max(n_axes, 1)
+        pop = space.sample_digits(rng, self.population)
+        evaluated = 0
+        for _ in range(self.generations):
+            metrics = evaluate(space.assemble(pop))
+            evaluated += len(pop)
+            obj = np.stack([np.asarray(metrics[k], np.float64)
+                            for k in objectives], axis=1)
+            nondom = pareto_mask_k(obj)
+            # rank: non-dominated first, then by normalized objective sum
+            span = np.maximum(obj.max(axis=0) - obj.min(axis=0), 1e-300)
+            score = ((obj - obj.min(axis=0)) / span).sum(axis=1)
+            order = np.argsort(score + np.where(nondom, 0.0, obj.shape[1]),
+                               kind="stable")
+            parents = pop[order[:max(2, self.population // 2)]]
+            pa = parents[rng.integers(len(parents), size=self.population)]
+            pb = parents[rng.integers(len(parents), size=self.population)]
+            children = np.where(
+                rng.random((self.population, n_axes)) < 0.5, pa, pb)
+            mutate = rng.random((self.population, n_axes)) < mut_p
+            pop = np.where(mutate, space.sample_digits(rng, self.population),
+                           children)
+        return evaluated

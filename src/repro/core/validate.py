@@ -127,6 +127,35 @@ def validate(net: FixedPointNet, spike_input: np.ndarray,
     return bool(np.array_equal(hw, ref))
 
 
+def population_predict(spike_out: np.ndarray, num_classes: int) -> np.ndarray:
+    """(T, B, num_classes*pcr) output spikes -> (B,) predicted classes.
+
+    Class-major population pooling, the layout the hardware generator
+    assumes (neuron ``i`` belongs to class ``i // pcr``) — the NumPy twin of
+    ``encoding.population_decode``.
+    """
+    totals = spike_out.sum(axis=0)                       # (B, n_out)
+    b, n = totals.shape
+    assert n % num_classes == 0, (n, num_classes)
+    return totals.reshape(b, num_classes, n // num_classes).sum(-1).argmax(-1)
+
+
+def quantized_accuracy(weights: list[np.ndarray], biases: list[np.ndarray],
+                       spike_input: np.ndarray, labels: np.ndarray,
+                       num_classes: int, *, frac_bits: int,
+                       beta: float = 0.95, threshold: float = 1.0) -> float:
+    """Classification accuracy of the fixed-point datapath at a given weight
+    precision — the accuracy leg of the ``weight_bits`` DSE axis (the BRAM
+    leg is ``dse.sweep_weight_bits`` / the ``bram`` objective).
+
+    ``spike_input``: (T, B, fan_in) {0,1}; ``labels``: (B,).
+    """
+    net = quantize(weights, biases, beta, threshold, frac_bits=frac_bits)
+    pred = population_predict(reference_apply_batch(net, spike_input),
+                              num_classes)
+    return float((pred == np.asarray(labels)).mean())
+
+
 def reference_apply_batch(net: FixedPointNet,
                           spike_input: np.ndarray) -> np.ndarray:
     """Vectorised fixed-point forward over a batch.

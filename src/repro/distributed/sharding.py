@@ -30,9 +30,20 @@ PyTree = Any
 FSDP_ARCHS = {"arctic-480b", "qwen2-vl-72b", "mixtral-8x7b", "chatglm3-6b"}
 
 
-def _path_str(path) -> str:
-    return "/".join(getattr(k, "key", getattr(k, "idx", str(k))) and
-                    str(getattr(k, "key", getattr(k, "idx", ""))) for k in path)
+def _keystr(path) -> str:
+    """``jax.tree_util.keystr(path, simple=True, separator="/")``, built by
+    hand because the ``simple``/``separator`` kwargs only exist in newer JAX
+    releases.  DictKey carries ``.key``, GetAttrKey ``.name``, SequenceKey
+    ``.idx``, FlattenedIndexKey ``.key``."""
+    parts = []
+    for entry in path:
+        for attr in ("key", "name", "idx"):
+            if hasattr(entry, attr):
+                parts.append(str(getattr(entry, attr)))
+                break
+        else:
+            parts.append(str(entry))
+    return "/".join(parts)
 
 
 def _divisible(n: int, mesh, axis: str) -> bool:
@@ -121,7 +132,7 @@ def param_specs(cfg: ArchConfig, params_shapes: PyTree, mesh,
     fsdp = cfg.name in FSDP_ARCHS if fsdp is None else fsdp
 
     def one(path, leaf):
-        p = jax.tree_util.keystr(path, simple=True, separator="/")
+        p = _keystr(path)
         spec = param_spec(p, leaf.shape, cfg, mesh)
         if fsdp:
             spec = fsdp_extend(spec, leaf.shape, mesh,
@@ -254,7 +265,7 @@ def batch_specs(cfg: ArchConfig, batch: PyTree, mesh) -> PyTree:
     ba = _baxes(mesh)
 
     def one(path, leaf):
-        p = jax.tree_util.keystr(path, simple=True, separator="/")
+        p = _keystr(path)
         nb = int(np.prod([mesh.shape[a] for a in
                           (ba if isinstance(ba, tuple) else (ba,))]))
         if "positions" in p:               # (3, B, S)
@@ -280,7 +291,7 @@ def cache_specs(cfg: ArchConfig, cache_shapes: PyTree, mesh,
     M = "model"
 
     def one(path, leaf):
-        p = jax.tree_util.keystr(path, simple=True, separator="/")
+        p = _keystr(path)
         if p.endswith("length"):
             return P()
         if p.endswith("slot_pos"):          # (B, C)

@@ -1,0 +1,400 @@
+"""Tests for the unified multi-axis DSE subsystem: k-objective Pareto on
+ties/duplicates, chunked-vs-monolithic equivalence, joint-axis sweeps
+reproducing the legacy wrappers exactly, batched cycle-model/resource paths
+against their scalar twins, and >200k-candidate streaming."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import dse
+from repro.core.accelerator import arch, cycle_model, paper_nets, resources
+
+
+def _fc_cfg(lhr=(1, 1), sizes=(100, 50, 20), T=5):
+    return arch.from_layer_sizes("t", sizes, lhr=lhr, num_steps=T)
+
+
+def _net1():
+    cfg = paper_nets.build("net-1")
+    return cfg, paper_nets.paper_counts("net-1", cfg)
+
+
+def _brute_force_mask(obj):
+    n = len(obj)
+    mask = np.ones(n, dtype=bool)
+    for i in range(n):
+        for j in range(n):
+            if np.all(obj[j] <= obj[i]) and np.any(obj[j] < obj[i]):
+                mask[i] = False
+                break
+    return mask
+
+
+def _sorted_rows(a):
+    a = np.asarray(a, np.float64)
+    return a[np.lexsort(a.T)]
+
+
+class TestParetoMask:
+    def test_ties_and_duplicates(self):
+        obj = np.array([[1.0, 2.0], [1.0, 2.0],     # duplicated frontier pt
+                        [2.0, 1.0],
+                        [2.0, 2.0],                  # dominated by (1,2)
+                        [1.0, 3.0],                  # dominated by (1,2)
+                        [3.0, 1.0]])                 # dominated by (2,1)
+        mask = dse.pareto_mask_k(obj)
+        np.testing.assert_array_equal(
+            mask, [True, True, True, False, False, False])
+
+    @pytest.mark.parametrize("k", [2, 3, 4])
+    @pytest.mark.parametrize("seed", range(3))
+    def test_matches_brute_force_with_ties(self, k, seed):
+        rng = np.random.default_rng(seed)
+        # small integer grid => plenty of exact ties and duplicates
+        obj = rng.integers(0, 4, size=(60, k)).astype(float)
+        np.testing.assert_array_equal(dse.pareto_mask_k(obj),
+                                      _brute_force_mask(obj))
+
+    def test_blockwise_matches_single_block(self):
+        rng = np.random.default_rng(7)
+        obj = rng.integers(0, 10, size=(500, 3)).astype(float)
+        np.testing.assert_array_equal(dse.pareto_mask_k(obj, block=17),
+                                      dse.pareto_mask_k(obj, block=10_000))
+
+    def test_legacy_two_objective_signature(self):
+        cyc = np.array([1.0, 2.0, 3.0, 2.0])
+        lut = np.array([3.0, 2.0, 1.0, 2.0])
+        mask = dse.pareto_mask(cyc, lut)
+        np.testing.assert_array_equal(mask, [True, True, True, True])
+        assert not dse.pareto_mask(np.array([1.0, 2.0]),
+                                   np.array([1.0, 2.0]))[1]
+
+
+class TestParetoAccumulator:
+    @pytest.mark.parametrize("chunk", [1, 7, 64, 1000])
+    @pytest.mark.parametrize("seed", range(3))
+    def test_incremental_equals_monolithic(self, chunk, seed):
+        rng = np.random.default_rng(seed)
+        obj = rng.integers(0, 5, size=(300, 3)).astype(float)  # many dups
+        acc = dse.ParetoAccumulator(("a", "b", "c"))
+        for s in range(0, len(obj), chunk):
+            sub = obj[s:s + chunk]
+            acc.update(dse.CandidateTable(
+                {"a": sub[:, 0], "b": sub[:, 1], "c": sub[:, 2]}))
+        got = np.stack([acc.frontier.columns[k] for k in "abc"], axis=1)
+        # exact full-row duplicates are kept once, independent of chunking
+        want = np.unique(obj[dse.pareto_mask_k(obj)], axis=0)
+        np.testing.assert_array_equal(_sorted_rows(got), _sorted_rows(want))
+
+    def test_empty_and_single_updates(self):
+        acc = dse.ParetoAccumulator(("x",))
+        assert len(acc.frontier) == 0
+        acc.update(dse.CandidateTable({"x": np.array([3.0, 1.0, 2.0])}))
+        np.testing.assert_array_equal(acc.frontier.columns["x"], [1.0])
+
+    def test_reevaluated_candidate_kept_once(self):
+        """Re-visiting the same candidate (Random/EvolutionarySearch) must
+        not inflate the frontier, while distinct candidates with tied
+        objectives both survive."""
+        acc = dse.ParetoAccumulator(("cycles", "lut"))
+        chunk = dse.CandidateTable({"lhr": np.array([[1, 2], [2, 1]]),
+                                    "cycles": np.array([5.0, 5.0]),
+                                    "lut": np.array([3.0, 3.0])})
+        acc.update(chunk)
+        acc.update(chunk)                       # exact re-evaluation
+        assert len(acc.frontier) == 2           # tie kept, re-visit dropped
+        assert sorted(map(tuple, acc.frontier.columns["lhr"].tolist())) == \
+            [(1, 2), (2, 1)]
+
+
+class TestSearchSpace:
+    def test_size_and_decode_order_match_product(self):
+        cfg = _fc_cfg()
+        space = dse.SearchSpace.product_lhr(cfg, max_lhr=8)
+        grid = dse.lhr_grid(cfg, max_lhr=8)
+        assert space.size == len(grid)
+        np.testing.assert_array_equal(
+            space.decode(np.arange(space.size))["lhr"], grid)
+
+    def test_joint_and_global_axes(self):
+        cfg = _fc_cfg()
+        space = (dse.SearchSpace(cfg)
+                 .add_joint("mem_blocks", [(1, 1), (2, 2), (4, 2)])
+                 .add_global("weight_bits", (4, 8)))
+        assert space.size == 6
+        cols = space.decode(np.arange(6))
+        assert cols["mem_blocks"].shape == (6, 2)
+        assert cols["weight_bits"].shape == (6,)
+        # last axis fastest (itertools.product order)
+        np.testing.assert_array_equal(cols["weight_bits"],
+                                      [4, 8, 4, 8, 4, 8])
+        np.testing.assert_array_equal(cols["mem_blocks"][:, 0],
+                                      [1, 1, 2, 2, 4, 4])
+
+    def test_per_layer_defaults_fill_uncovered_layers(self):
+        cfg = _fc_cfg(lhr=(5, 2))
+        space = dse.SearchSpace(cfg, [dse.Axis("lhr", (1, 4), layer=0)])
+        cols = space.decode(np.arange(space.size))
+        np.testing.assert_array_equal(cols["lhr"],
+                                      [[1, 2], [4, 2]])
+
+    def test_conflicting_axes_rejected(self):
+        cfg = _fc_cfg()
+        space = dse.SearchSpace(cfg).add_global("weight_bits", (4, 8))
+        with pytest.raises(ValueError):
+            space.add_global("weight_bits", (16,))
+        with pytest.raises(ValueError):
+            space.add_joint("weight_bits", [(4, 4)])
+
+
+class TestBatchedModels:
+    """The batched cycle-model/resource paths equal their scalar twins on
+    materialized configs — for every axis, not just LHR."""
+
+    def _combos(self, cfg, seed=0):
+        rng = np.random.default_rng(seed)
+        n = 12
+        L = len(cfg.layers)
+        lhr = np.stack([rng.choice(dse.pow2_values(l.logical), size=n)
+                        for l in cfg.layers], axis=1)
+        mem = np.stack([rng.choice([0, 1, 2, 8], size=n)
+                        for _ in range(L)], axis=1)
+        wb = rng.choice([4, 8, 16], size=n)
+        pw = rng.choice([50, 100], size=n)
+        return lhr, mem, wb, pw
+
+    def test_latency_joint_lhr_mem_penc_matches_scalar(self):
+        cfg, counts = _net1()
+        lhr, mem, _, pw = self._combos(cfg)
+        vec = cycle_model.latency_cycles(cfg, counts, lhr_matrix=lhr,
+                                         mem_blocks_matrix=mem,
+                                         penc_width=pw)
+        for i in range(len(lhr)):
+            c = cfg.with_updates(lhr=lhr[i], mem_blocks=mem[i],
+                                 penc_width=int(pw[i]))
+            scalar = cycle_model.latency_cycles(c, counts)
+            np.testing.assert_array_equal(vec[i], scalar)
+
+    def test_estimate_vector_matches_scalar(self):
+        cfg, _ = _net1()
+        lhr, mem, wb, pw = self._combos(cfg, seed=1)
+        vec = resources.estimate_vector(cfg, lhr_matrix=lhr,
+                                        mem_blocks_matrix=mem,
+                                        weight_bits=wb, penc_width=pw)
+        for i in range(len(lhr)):
+            c = cfg.with_updates(lhr=lhr[i], mem_blocks=mem[i],
+                                 weight_bits=int(wb[i]),
+                                 penc_width=int(pw[i]))
+            r = resources.estimate(c)
+            np.testing.assert_allclose(vec.lut[i], r.lut, rtol=1e-12)
+            np.testing.assert_allclose(vec.reg[i], r.reg, rtol=1e-12)
+            assert vec.bram36[i] == r.bram36
+            assert vec.dsp[i] == r.dsp
+
+    def test_energy_vector_matches_scalar(self):
+        cfg, counts = _net1()
+        lhr, _, _, _ = self._combos(cfg, seed=2)
+        cycles = cycle_model.latency_cycles(cfg, counts, lhr_matrix=lhr)
+        vec = resources.energy_mj_vector(cfg, counts, cycles, lhr_matrix=lhr)
+        for i in range(len(lhr)):
+            c = cfg.with_lhr(tuple(int(x) for x in lhr[i]))
+            assert vec[i] == resources.energy_mj(c, counts, float(cycles[i]))
+
+
+class TestChunkedEquivalence:
+    def test_chunked_vs_monolithic_search(self):
+        cfg, counts = _net1()
+        space = (dse.SearchSpace.product_lhr(cfg, max_lhr=8)
+                 .add_global("weight_bits", (4, 8)))
+        a = dse.search(cfg, counts, space, chunk_size=13)
+        b = dse.search(cfg, counts, space, chunk_size=10**6)
+        assert a.n_evaluated == b.n_evaluated == space.size
+        ga = np.stack([a.frontier.columns[k] for k in a.objectives], axis=1)
+        gb = np.stack([b.frontier.columns[k] for k in b.objectives], axis=1)
+        np.testing.assert_array_equal(_sorted_rows(ga), _sorted_rows(gb))
+
+    def test_search_frontier_equals_legacy_sweep(self):
+        cfg, counts = _net1()
+        legacy = dse.sweep(cfg, counts, max_lhr=16)
+        res = dse.search(cfg, counts,
+                         dse.SearchSpace.product_lhr(cfg, max_lhr=16),
+                         objectives=("cycles", "lut"), chunk_size=97)
+        want = sorted((c.lhr, c.cycles, c.lut) for c in legacy.frontier)
+        got = sorted((r["lhr"], r["cycles"], r["lut"])
+                     for r in (res.frontier.row(i)
+                               for i in range(len(res.frontier))))
+        assert want == got
+
+
+class TestLegacyWrappers:
+    """The rewired wrappers reproduce the seed implementations exactly."""
+
+    def test_sweep_matches_seed_style_per_candidate_loop(self):
+        cfg, counts = _net1()
+        res = dse.sweep(cfg, counts, max_lhr=8, chunk_size=11)
+        assert len(res.candidates) == 4 ** 3
+        for c in list(res.candidates)[::17]:
+            ccfg = cfg.with_lhr(c.lhr)
+            assert c.cycles == float(cycle_model.latency_cycles(ccfg, counts))
+            assert c.lut == resources.estimate(ccfg).lut
+            assert c.energy_mj == resources.energy_mj(ccfg, counts, c.cycles)
+
+    def test_sweep_memory_blocks_matches_seed(self):
+        cfg, counts = _net1()
+        cfg = cfg.with_lhr((2, 2, 2))
+        got = dse.sweep_memory_blocks(cfg, counts, divisors=(1, 2, 4, 8))
+        assert len(got) == 4
+        for cand in got:
+            layers = tuple(dataclasses.replace(l, mem_blocks=b)
+                           for l, b in zip(cfg.layers, cand.blocks))
+            c = dataclasses.replace(cfg, layers=layers)
+            assert cand.blocks == tuple(l.num_mem_blocks for l in layers)
+            assert cand.cycles == float(cycle_model.latency_cycles(c, counts))
+            r = resources.estimate(c)
+            assert cand.lut == r.lut and cand.bram == r.bram36
+
+    def test_sweep_weight_bits_matches_seed(self):
+        cfg, _ = _net1()
+        got = dse.sweep_weight_bits(cfg, (4, 6, 8, 12, 16))
+        for bits, bram in got.items():
+            layers = tuple(dataclasses.replace(l, weight_bits=bits)
+                           for l in cfg.layers)
+            c = dataclasses.replace(cfg, layers=layers)
+            assert bram == resources.estimate(c).bram36
+
+    def test_joint_axis_sweep_reproduces_both_wrappers(self):
+        """One joint LHR x mem_blocks x weight_bits space contains the old
+        single-axis sweeps as slices, with identical numbers."""
+        cfg, counts = _net1()
+        cfg = cfg.with_lhr((2, 2, 2))
+        divisors = (1, 2, 4)
+        bits = (4, 8)
+        space = (dse.SearchSpace(cfg)
+                 .add_joint("mem_blocks",
+                            [tuple(max(1, l.num_nus // d) for l in cfg.layers)
+                             for d in divisors])
+                 .add_global("weight_bits", bits))
+        res = dse.search(cfg, counts, space, keep_all=True)
+        t = res.table
+        assert res.n_evaluated == len(divisors) * len(bits)
+        mem_ref = dse.sweep_memory_blocks(cfg, counts, divisors=divisors)
+        bits_ref = dse.sweep_weight_bits(cfg, bits)
+        for i in range(len(t)):
+            row = t.row(i)
+            mem_row = mem_ref[i // len(bits)]
+            assert row["mem_blocks"] == mem_row.blocks
+            assert row["cycles"] == mem_row.cycles
+            assert row["lut"] == mem_row.lut
+            # BRAM depends only on weight_bits for these layers
+            assert row["bram"] == bits_ref[row["weight_bits"]]
+
+
+class TestStreamingLargeSpace:
+    def test_over_200k_candidates_stream_without_cap(self):
+        cfg = arch.from_layer_sizes("big", (512, 256, 256, 256, 256),
+                                    num_steps=2)
+        counts = [np.full(2, 30.0)] * 4
+        space = (dse.SearchSpace.product_lhr(cfg, max_lhr=256)
+                 .add_joint("mem_blocks",
+                            [tuple(max(1, l.num_nus // d)
+                                   for l in cfg.layers)
+                             for d in (1, 2, 4, 8)])
+                 .add_global("weight_bits", (4, 6, 8, 12))
+                 .add_global("penc_width", (64, 100)))
+        assert space.size > 200_000
+        # the seed grid path refuses a space this large ...
+        with pytest.raises(ValueError, match="exceed cap"):
+            dse.lhr_grid(arch.from_layer_sizes(
+                "x", (512,) + (256,) * 6), max_lhr=256)
+        # ... the streaming engine does not
+        res = dse.search(cfg, counts, space, chunk_size=32768)
+        assert res.n_evaluated == space.size
+        assert res.table is None                     # nothing materialized
+        assert 0 < len(res.frontier) < res.n_evaluated
+        fo = np.stack([res.frontier.columns[k] for k in res.objectives],
+                      axis=1)
+        assert dse.pareto_mask_k(fo).all()           # mutually non-dominated
+
+    def test_streaming_frontier_equals_monolithic_on_control_space(self):
+        """Same axes, smaller extents: chunked streaming returns the exact
+        monolithic frontier."""
+        cfg = arch.from_layer_sizes("ctl", (128, 64, 64), num_steps=2)
+        counts = [np.full(2, 10.0)] * 2
+        space = (dse.SearchSpace.product_lhr(cfg, max_lhr=16)
+                 .add_global("weight_bits", (4, 8)))
+        chunked = dse.search(cfg, counts, space, chunk_size=19)
+        mono = dse.search(cfg, counts, space, chunk_size=10**6,
+                          keep_all=True)
+        mask = dse.pareto_mask_k(np.stack(
+            [mono.table.columns[k] for k in mono.objectives], axis=1))
+        want = np.stack([mono.table.columns[k][mask]
+                         for k in mono.objectives], axis=1)
+        got = np.stack([chunked.frontier.columns[k]
+                        for k in chunked.objectives], axis=1)
+        np.testing.assert_array_equal(_sorted_rows(got), _sorted_rows(want))
+
+
+class TestStrategiesAndSelect:
+    def _small(self):
+        cfg = _fc_cfg(sizes=(64, 32, 16), T=3)
+        counts = [np.full(3, 8.0)] * 2
+        space = dse.SearchSpace.product_lhr(cfg, max_lhr=8)
+        return cfg, counts, space
+
+    def test_random_search_deterministic_and_valid(self):
+        cfg, counts, space = self._small()
+        a = dse.search(cfg, counts, space,
+                       strategy=dse.RandomSearch(200, seed=3), keep_all=True)
+        b = dse.search(cfg, counts, space,
+                       strategy=dse.RandomSearch(200, seed=3), keep_all=True)
+        assert a.n_evaluated == b.n_evaluated == 200
+        np.testing.assert_array_equal(a.table.columns["lhr"],
+                                      b.table.columns["lhr"])
+        caps = np.asarray([min(8, l.logical) for l in cfg.layers])
+        assert (a.table.columns["lhr"] <= caps).all()
+
+    def test_evolutionary_search_runs_and_converges_sane(self):
+        cfg, counts, space = self._small()
+        res = dse.search(cfg, counts, space,
+                         strategy=dse.EvolutionarySearch(
+                             population=16, generations=5, seed=0))
+        assert res.n_evaluated == 16 * 5
+        fo = np.stack([res.frontier.columns[k] for k in res.objectives],
+                      axis=1)
+        assert dse.pareto_mask_k(fo).all()
+
+    def test_auto_select_budgets(self):
+        cfg, counts = _net1()
+        space = dse.SearchSpace.product_lhr(cfg, max_lhr=16)
+        picked, row = dse.auto_select(cfg, counts, max_cycles=20e3,
+                                      space=space, keep_all=True)
+        assert row["cycles"] <= 20e3
+        assert picked.lhr == row["lhr"]
+        # optimality vs the exhaustive legacy sweep
+        legacy = dse.sweep(cfg, counts, max_lhr=16)
+        best = legacy.best_within_latency(20e3)
+        assert row["lut"] == best.lut
+        picked2, row2 = dse.auto_select(cfg, counts, max_lut=50e3,
+                                        space=space, keep_all=True)
+        assert row2["lut"] <= 50e3
+        assert row2["cycles"] == legacy.best_within_area(50e3).cycles
+        _, row3 = dse.auto_select(cfg, counts, space=space)
+        assert row3["energy"] == legacy.min_energy().energy_mj
+        assert dse.auto_select(cfg, counts, max_cycles=1.0,
+                               space=space) is None
+
+    def test_frontier_only_result_rejects_non_objective_queries(self):
+        cfg, counts = _net1()
+        res = dse.search(cfg, counts,
+                         dse.SearchSpace.product_lhr(cfg, max_lhr=8),
+                         objectives=("cycles", "lut"))
+        with pytest.raises(ValueError, match="not search objectives"):
+            res.min_energy()                     # energy not an objective
+        with pytest.raises(ValueError, match="not search objectives"):
+            res.best_under("lut", bram=100)
+        assert res.best_within_latency(1e9) is not None   # objectives: fine
+        full = dse.search(cfg, counts,
+                          dse.SearchSpace.product_lhr(cfg, max_lhr=8),
+                          objectives=("cycles", "lut"), keep_all=True)
+        assert full.min_energy() is not None     # full table: any column
