@@ -31,10 +31,8 @@ def run(quick: bool = False):
                 num_classes=10, pcr=pcr, num_steps=T)
             res = train_snn.train(cfg, data, steps=60 if quick else 120,
                                   batch_size=64)
-            traces = train_snn.dump_traces(cfg, res.params, data.x_test,
-                                           max_samples=16)
-            counts = [c.mean(axis=1) for c in
-                      traces["layer_input_spike_counts"]]
+            counts = train_snn.trace_counts(cfg, res.params, data.x_test,
+                                            max_samples=16)
             hw = hw_arch.from_layer_sizes(
                 cfg.name, (784, 64, 64, 10 * pcr), lhr=(1, 1, 1),
                 num_steps=T)

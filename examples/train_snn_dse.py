@@ -5,12 +5,14 @@ Simulation & VALIDATION (exact spike-to-spike, fixed-point) -> Evaluation.
     PYTHONPATH=src python examples/train_snn_dse.py [--dataset dvs]
 """
 import argparse
+import dataclasses
+import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dse, encoding, snn, train_snn, validate
+from repro.core import dse, encoding, snn, train_snn, validate, workloads
 from repro.core.accelerator import arch as hw
 from repro.core.accelerator import cycle_model, resources
 from repro.data import synthetic
@@ -20,6 +22,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="mnist", choices=["mnist", "dvs"])
     ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--coexplore", action="store_true",
+                    help="also run the joint model x hardware co-exploration "
+                         "walkthrough (trains several small model cells)")
     args = ap.parse_args()
 
     # ---- Training Phase ----
@@ -41,8 +46,7 @@ def main():
     print(f"accuracy: {res.test_accuracy:.3f}")
 
     # ---- Configuration Phase: dump spikes + weights ----
-    traces = train_snn.dump_traces(cfg, res.params, data.x_test)
-    counts = [c.mean(axis=1) for c in traces["layer_input_spike_counts"]]
+    counts = train_snn.trace_counts(cfg, res.params, data.x_test)
 
     # ---- Architecture Generation ----
     accel = hw.from_snn_config(cfg)
@@ -130,6 +134,35 @@ def main():
                 frac_bits=int(row["weight_bits"]) - 1)
             print(f"fixed-point accuracy at {row['weight_bits']} bits: "
                   f"{acc_q:.3f} (float: {res.test_accuracy:.3f})")
+
+    # ---- Model x hardware co-exploration (the paper's headline loop) ----
+    # Model parameters (spike-train length T, neuron population scale)
+    # become searchable axes: each model cell trains once through the
+    # content-addressed trace cache, then its hardware subspace streams
+    # through the same chunked evaluator, with accuracy (as ``error`` =
+    # 1 - accuracy) a first-class Pareto objective.  See DESIGN.md §9.
+    if args.coexplore:
+        wl = dataclasses.replace(
+            workloads.get("mnist-mlp"), name="example-co",
+            layers=(snn.Dense(48),), pcr=2,
+            n_train=512, n_test=128, train_steps=60)
+        with tempfile.TemporaryDirectory() as root:
+            co = dse.coexplore(wl, num_steps=(4, 8), population=(0.5, 1.0),
+                               max_lhr=8, weight_bits=(4, 8),
+                               cache=workloads.TraceCache(root=root))
+            print(f"\nco-exploration: {len(co.cells)} model cells "
+                  f"({co.cache_stats['misses']} trained), "
+                  f"{co.n_evaluated} hardware candidates, "
+                  f"{len(co.frontier)} on the accuracy-aware frontier")
+            print(f"{'T':>3} {'pop':>5} {'lhr':>10} {'bits':>4} "
+                  f"{'acc':>6} {'cycles':>8} {'LUT':>8}")
+            fr = co.frontier.sorted_by("cycles")
+            for i in range(min(8, len(fr))):
+                r = fr.row(i)
+                print(f"{r['num_steps']:>3} {r['population']:>5.2g} "
+                      f"{str(r['lhr']):>10} {r['weight_bits']:>4} "
+                      f"{r['accuracy']:>6.3f} {r['cycles']:>8.0f} "
+                      f"{r['lut']/1e3:>7.1f}K")
 
 
 if __name__ == "__main__":

@@ -144,8 +144,43 @@ def latency_cycles(cfg: AcceleratorConfig, counts: Sequence[np.ndarray],
     return pipeline_latency(lat)
 
 
-def latency_seconds(cfg: AcceleratorConfig, counts) -> np.ndarray:
-    return latency_cycles(cfg, counts) / (cfg.timing.clock_mhz * 1e6)
+def latency_seconds(cfg: AcceleratorConfig, counts,
+                    lhr_matrix: np.ndarray | None = None,
+                    mem_blocks_matrix: np.ndarray | None = None,
+                    penc_width: np.ndarray | None = None,
+                    clock_mhz: np.ndarray | float | None = None) -> np.ndarray:
+    """Wall-clock latency; forwards the batched DSE kwargs so a vectorised
+    sweep gets per-candidate seconds directly (shape follows
+    ``latency_cycles``).  ``clock_mhz`` may be a per-candidate (n,) vector
+    for sweeps with a clock axis; default is the base config's clock."""
+    clk = np.asarray(cfg.timing.clock_mhz if clock_mhz is None else clock_mhz,
+                     np.float64)
+    return latency_cycles(cfg, counts, lhr_matrix=lhr_matrix,
+                          mem_blocks_matrix=mem_blocks_matrix,
+                          penc_width=penc_width) / (clk * 1e6)
+
+
+def counts_from_traces(counts: Sequence[np.ndarray],
+                       pool_before: Sequence[bool] | None = None,
+                       pool_retention: float = 1.0) -> list[np.ndarray]:
+    """Sampled per-layer spike traces -> per-layer (T,) mean traffic.
+
+    ``counts``: one array per spiking layer, shaped (T,) or (T, N) / any
+    trailing sample axes (the ``snn.spike_counts_per_layer`` /
+    ``train_snn.dump_traces`` output); trailing axes are averaged away.
+    ``pool_before[l]``: True if an OR-pool sits in front of layer ``l`` —
+    its traffic is scaled by ``pool_retention`` (spike survival fraction).
+    Traces dumped from a real model already carry pooling in the counts, so
+    retention scaling is only for average-based (Table-I style) traffic.
+    """
+    out = []
+    for l, c in enumerate(counts):
+        c = np.asarray(c, dtype=np.float64)
+        if c.ndim > 1:
+            c = c.mean(axis=tuple(range(1, c.ndim)))
+        scale = pool_retention if pool_before and pool_before[l] else 1.0
+        out.append(c * scale)
+    return out
 
 
 def counts_from_averages(cfg: AcceleratorConfig, avg_spikes: Sequence[float],
@@ -158,12 +193,10 @@ def counts_from_averages(cfg: AcceleratorConfig, avg_spikes: Sequence[float],
     (its traffic is scaled by ``timing.pool_retention``).
     """
     T = num_steps or cfg.num_steps
-    out = []
-    for l, s in enumerate(avg_spikes):
-        scale = (cfg.timing.pool_retention
-                 if pool_before and pool_before[l] else 1.0)
-        out.append(np.full((T,), float(s) * scale))
-    return out
+    return counts_from_traces(
+        [np.full((T,), float(s)) for s in avg_spikes],
+        pool_before=pool_before,
+        pool_retention=cfg.timing.pool_retention)
 
 
 @dataclasses.dataclass

@@ -58,7 +58,16 @@ stays flat and the frontier merge is exact (see tests/test_dse.py).  For
 spaces too large to enumerate, pass ``strategy=dse.RandomSearch(100_000)``
 or ``dse.EvolutionarySearch()``.  See DESIGN.md §8 and
 ``examples/train_snn_dse.py`` for the full walkthrough.
+
+Model parameters are axes too: ``space.add_model("num_steps", (8, 15, 25))``
+/ ``add_model("population", ...)`` / ``add_model("dataset", ...)`` declare
+the model subspace, and ``dse.coexplore`` (DESIGN.md §9) factors the joint
+space into (model cell) x (hardware subspace), resolving each cell once
+through the ``repro.core.workloads`` trace cache and minimizing ``error``
+(= 1 - accuracy) next to the hardware objectives.
 """
+from repro.core.dse.coexplore import (CO_METRICS, DEFAULT_CO_OBJECTIVES,
+                                      CellRecord, CoExploreResult, coexplore)
 from repro.core.dse.compat import (Candidate, DSEResult, MemBlockCandidate,
                                    lhr_grid, sweep, sweep_memory_blocks,
                                    sweep_spike_train_length,
@@ -68,17 +77,18 @@ from repro.core.dse.engine import (DEFAULT_OBJECTIVES, SearchResult,
 from repro.core.dse.evaluate import METRICS, evaluate_columns
 from repro.core.dse.pareto import (ParetoAccumulator, any_dominates,
                                    frontier_of, pareto_mask, pareto_mask_k)
-from repro.core.dse.space import Axis, SearchSpace, pow2_values
+from repro.core.dse.space import MODEL_AXES, Axis, SearchSpace, pow2_values
 from repro.core.dse.strategies import (EvolutionarySearch, GridSearch,
                                        RandomSearch)
 from repro.core.dse.table import CandidateTable
 
 __all__ = [
-    "Axis", "Candidate", "CandidateTable", "DEFAULT_OBJECTIVES", "DSEResult",
-    "EvolutionarySearch", "GridSearch", "METRICS", "MemBlockCandidate",
-    "ParetoAccumulator", "RandomSearch", "SearchResult", "SearchSpace",
-    "any_dominates", "auto_select", "evaluate_columns", "frontier_of",
-    "lhr_grid", "pareto_mask", "pareto_mask_k", "pow2_values", "search",
-    "sweep", "sweep_memory_blocks", "sweep_spike_train_length",
-    "sweep_weight_bits",
+    "Axis", "CO_METRICS", "Candidate", "CandidateTable", "CellRecord",
+    "CoExploreResult", "DEFAULT_CO_OBJECTIVES", "DEFAULT_OBJECTIVES",
+    "DSEResult", "EvolutionarySearch", "GridSearch", "METRICS", "MODEL_AXES",
+    "MemBlockCandidate", "ParetoAccumulator", "RandomSearch", "SearchResult",
+    "SearchSpace", "any_dominates", "auto_select", "coexplore",
+    "evaluate_columns", "frontier_of", "lhr_grid", "pareto_mask",
+    "pareto_mask_k", "pow2_values", "search", "sweep", "sweep_memory_blocks",
+    "sweep_spike_train_length", "sweep_weight_bits",
 ]

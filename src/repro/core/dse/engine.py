@@ -24,14 +24,14 @@ from repro.core.dse.table import CandidateTable
 DEFAULT_OBJECTIVES = ("cycles", "lut", "bram", "energy")
 
 
-@dataclasses.dataclass
-class SearchResult:
-    config: AcceleratorConfig
-    space: SearchSpace
+class FrontierQueries:
+    """Query surface shared by every result that retains a Pareto frontier
+    (and optionally the full table): expects ``objectives``, ``frontier``
+    and ``table`` attributes on the subclass."""
+
     objectives: tuple[str, ...]
-    frontier: CandidateTable          # Pareto-optimal rows (streamed merge)
-    n_evaluated: int
-    table: Optional[CandidateTable] = None    # all rows iff keep_all
+    frontier: CandidateTable
+    table: Optional[CandidateTable]
 
     def _rows(self, needed: Sequence[str]) -> CandidateTable:
         """Full table when kept; else the frontier — which is only a valid
@@ -61,6 +61,16 @@ class SearchResult:
             return None
         sub = t.take(ok)
         return sub.row(sub.argmin(minimize))
+
+
+@dataclasses.dataclass
+class SearchResult(FrontierQueries):
+    config: AcceleratorConfig
+    space: SearchSpace
+    objectives: tuple[str, ...]
+    frontier: CandidateTable          # Pareto-optimal rows (streamed merge)
+    n_evaluated: int
+    table: Optional[CandidateTable] = None    # all rows iff keep_all
 
     def best_within_latency(self, max_cycles: float) -> Optional[dict]:
         return self.best_under("lut", cycles=max_cycles)
@@ -97,6 +107,11 @@ def search(cfg: AcceleratorConfig, counts: Sequence[np.ndarray],
     space = space if space is not None else SearchSpace.product_lhr(cfg)
     if not space.axes:
         raise ValueError("search space has no axes")
+    if space.model_axes:
+        raise ValueError(
+            f"space has model axes "
+            f"{[ax.name for ax in space.model_axes]}; those require "
+            f"training/cache resolution per cell — use dse.coexplore")
     for obj in objectives:
         if obj not in METRICS:
             raise ValueError(f"unknown objective {obj!r}; pick from {METRICS}")

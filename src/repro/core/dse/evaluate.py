@@ -15,7 +15,7 @@ from repro.core.accelerator.arch import AcceleratorConfig
 
 METRICS = ("cycles", "lut", "reg", "bram", "dsp", "energy")
 
-_AXIS_NAMES = frozenset(
+AXIS_NAMES = frozenset(
     {"lhr", "mem_blocks", "weight_bits", "penc_width", "clock_mhz"})
 
 
@@ -29,10 +29,10 @@ def evaluate_columns(cfg: AcceleratorConfig, counts: Sequence[np.ndarray],
     ``penc_width``, ``clock_mhz``) to (n, L) per-layer or (n,) global
     arrays.  Returns (n,) metric columns for ``METRICS``.
     """
-    unknown = set(cols) - _AXIS_NAMES
+    unknown = set(cols) - AXIS_NAMES
     if unknown:
         raise ValueError(f"unknown axes {sorted(unknown)}; "
-                         f"known: {sorted(_AXIS_NAMES)}")
+                         f"known: {sorted(AXIS_NAMES)}")
     if not cols:
         raise ValueError("no axis columns to evaluate")
     lib = lib or resources.CostLibrary()

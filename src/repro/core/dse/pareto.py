@@ -13,6 +13,7 @@ chunk holds tens of thousands of points.
 """
 from __future__ import annotations
 
+import zlib
 from typing import Optional, Sequence
 
 import numpy as np
@@ -80,12 +81,23 @@ def pareto_mask(cycles: np.ndarray, lut: np.ndarray) -> np.ndarray:
                                    np.asarray(lut, np.float64)], axis=1))
 
 
+def _col_as_f64(v: np.ndarray) -> np.ndarray:
+    """Column as float64 for duplicate keying.  Non-numeric columns (the
+    ``dataset`` model axis is a string column) map through crc32 — a
+    deterministic, process-independent code that is exact in float64."""
+    v = np.asarray(v)
+    if v.dtype.kind in "USO":
+        crc = np.frompyfunc(lambda s: float(zlib.crc32(str(s).encode())), 1, 1)
+        return crc(v).astype(np.float64)
+    return v.astype(np.float64)
+
+
 def _row_keys(table: CandidateTable, idx: np.ndarray | None = None
               ) -> np.ndarray:
     """Rows flattened across ALL columns, for exact-duplicate detection."""
     cols = []
     for k in sorted(table.columns):
-        v = np.asarray(table.columns[k], np.float64).reshape(len(table), -1)
+        v = _col_as_f64(table.columns[k]).reshape(len(table), -1)
         cols.append(v if idx is None else v[idx])
     return np.ascontiguousarray(np.concatenate(cols, axis=1))
 

@@ -26,15 +26,27 @@ Known axis names and where they act:
                    separately via ``validate.quantized_accuracy``)
   ``penc_width``   per layer or global — PENC scan cycles vs encoder LUTs
   ``clock_mhz``    global — runtime/energy scaling
+
+**Model axes** (``num_steps``, ``population``, ``dataset`` — added via
+``add_model``) live in the same declarative space but act on the *model*,
+not the hardware: every combination of their values is a *model cell* that
+must be trained (or cache-loaded) before hardware evaluation, so the plain
+``search`` engine refuses them — ``dse.coexplore`` factors the joint space
+into (model cell) x (hardware subspace) and streams each cell's hardware
+subspace through the usual chunked evaluator.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Sequence
 
 import numpy as np
 
 from repro.core.accelerator.arch import AcceleratorConfig
+
+#: axes resolved by training/loading a model cell, not by the cycle model
+MODEL_AXES = ("dataset", "num_steps", "population")
 
 # per-layer defaults pulled from the base config when an axis doesn't cover
 # a layer (or doesn't exist at all)
@@ -44,6 +56,15 @@ _PER_LAYER_DEFAULTS = {
     "weight_bits": lambda layer: layer.weight_bits,
     "penc_width": lambda layer: layer.penc_width,
 }
+
+
+def iter_cells(axes: Sequence[tuple[str, Sequence]]):
+    """Assignment dicts over (name, values) pairs, last axis fastest — the
+    product iteration shared by ``SearchSpace.model_cells`` and
+    ``dse.coexplore``'s kwargs path."""
+    names = [n for n, _ in axes]
+    for combo in itertools.product(*[v for _, v in axes]):
+        yield dict(zip(names, combo))
 
 
 def pow2_values(cap: int) -> list[int]:
@@ -126,6 +147,18 @@ class SearchSpace:
         return self
 
     def add_global(self, name: str, values: Sequence) -> "SearchSpace":
+        if name in MODEL_AXES:
+            raise ValueError(f"{name!r} is a model axis; use add_model")
+        self._append(Axis(name, tuple(values)))
+        return self
+
+    def add_model(self, name: str, values: Sequence) -> "SearchSpace":
+        """Model-parameter axis (``num_steps`` / ``population`` /
+        ``dataset``): each value combination is a model cell resolved by
+        training or the trace cache — see ``dse.coexplore``."""
+        if name not in MODEL_AXES:
+            raise ValueError(f"unknown model axis {name!r}; "
+                             f"pick from {MODEL_AXES}")
         self._append(Axis(name, tuple(values)))
         return self
 
@@ -144,6 +177,61 @@ class SearchSpace:
         for ax in self.axes:
             n *= ax.cardinality          # python int: no overflow
         return n if self.axes else 0
+
+    # ---- model / hardware factorization -----------------------------------
+    @property
+    def model_axes(self) -> list[Axis]:
+        return [ax for ax in self.axes if ax.name in MODEL_AXES]
+
+    @property
+    def hw_axes(self) -> list[Axis]:
+        return [ax for ax in self.axes if ax.name not in MODEL_AXES]
+
+    def model_cells(self):
+        """Iterate the model subspace: one assignment dict per cell, in
+        declared-axis product order (last axis fastest).  A space with no
+        model axes has exactly one (empty) cell."""
+        axes = self.model_axes
+        if not axes:
+            yield {}
+            return
+        yield from iter_cells([(ax.name, ax.values) for ax in axes])
+
+    def hardware_subspace(self, config: AcceleratorConfig | None = None
+                          ) -> "SearchSpace":
+        """The hardware-only axes, rebound to ``config`` (a model cell's
+        derived ``AcceleratorConfig``).  ``lhr`` options (per-layer scalar
+        or joint vector) are clamped to the cell's layer sizes (duplicates
+        dropped, order kept) — a population-scaled cell may be narrower
+        than the template the axes were declared against; joint axes whose
+        vector width disagrees with the cell's layer count are rejected."""
+        config = config if config is not None else self.config
+        sub = SearchSpace(config)
+        for ax in self.hw_axes:
+            if ax.layer is not None and ax.layer >= len(config.layers):
+                raise ValueError(
+                    f"axis {ax.name!r} binds layer {ax.layer} but the cell "
+                    f"config has {len(config.layers)} layers; pass a "
+                    f"per-cell hw_space callable to coexplore instead")
+            values = ax.values
+            if ax.is_vector:
+                if len(values[0]) != len(config.layers):
+                    raise ValueError(
+                        f"joint axis {ax.name!r} options are "
+                        f"{len(values[0])}-wide but the cell config has "
+                        f"{len(config.layers)} layers; pass a per-cell "
+                        f"hw_space callable to coexplore instead")
+                if ax.name == "lhr":
+                    caps = [l.logical for l in config.layers]
+                    values = tuple(dict.fromkeys(
+                        tuple(min(int(x), c) for x, c in zip(v, caps))
+                        for v in values))
+            elif ax.name == "lhr" and ax.layer is not None:
+                cap = config.layers[ax.layer].logical
+                values = tuple(dict.fromkeys(
+                    min(int(v), cap) for v in ax.values))
+            sub._append(Axis(ax.name, values, layer=ax.layer))
+        return sub
 
     # ---- decoding ---------------------------------------------------------
     def digits(self, flat_idx: np.ndarray) -> np.ndarray:

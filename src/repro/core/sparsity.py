@@ -7,10 +7,10 @@ import dataclasses
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import snn
+from repro.core.accelerator import cycle_model
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,10 +31,11 @@ def analyze(cfg: snn.SNNConfig, params, spike_input: jax.Array) -> list[LayerSpa
     NU workload in the accelerator.
     """
     counts = snn.spike_counts_per_layer(cfg, params, spike_input)  # list[(T,B)]
+    traffic = cycle_model.counts_from_traces(counts)               # list[(T,)]
     sizes = _input_sizes(cfg)
     out = []
-    for l, (c, n) in enumerate(zip(counts, sizes)):
-        avg = float(jnp.mean(c))
+    for l, (c, n) in enumerate(zip(traffic, sizes)):
+        avg = float(np.mean(c))
         ratio = avg / n
         out.append(LayerSparsity(
             layer=l, logical_neurons=n, avg_spikes_per_step=avg,

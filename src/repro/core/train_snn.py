@@ -18,6 +18,7 @@ import numpy as np
 
 from repro import optim
 from repro.core import encoding, snn
+from repro.core.accelerator import cycle_model
 from repro.data import synthetic
 
 PyTree = Any
@@ -118,3 +119,11 @@ def dump_traces(cfg: snn.SNNConfig, params: PyTree, x: np.ndarray,
         "layer_sizes": cfg.layer_sizes(),
         "num_steps": cfg.num_steps,
     }
+
+
+def trace_counts(cfg: snn.SNNConfig, params: PyTree, x: np.ndarray,
+                 seed: int = 7, max_samples: int = 64) -> list[np.ndarray]:
+    """``dump_traces`` reduced to the per-layer (T,) mean traffic the cycle
+    model consumes — the Configuration-Phase artifact most callers want."""
+    traces = dump_traces(cfg, params, x, seed=seed, max_samples=max_samples)
+    return cycle_model.counts_from_traces(traces["layer_input_spike_counts"])

@@ -1,0 +1,18 @@
+"""Workload registry + trace/accuracy cache (the model half of
+co-exploration — see DESIGN.md §9 and ``repro.core.dse.coexplore``).
+
+A ``Workload`` declares a dataset, a topology template with a
+population-scale knob, an encoding, and candidate spike-train lengths; the
+``TraceCache`` trains-or-loads any ``(workload, num_steps, population,
+seed)`` cell deterministically and content-addressed, so repeated sweeps
+never retrain and cells can be farmed out across processes.
+"""
+from repro.core.workloads.cache import (CellArtifact, TraceCache, cell_key,
+                                        default_root)
+from repro.core.workloads.registry import (DATASET_FAMILIES, Workload, get,
+                                           names, register)
+
+__all__ = [
+    "CellArtifact", "DATASET_FAMILIES", "TraceCache", "Workload", "cell_key",
+    "default_root", "get", "names", "register",
+]

@@ -1,0 +1,208 @@
+"""Content-addressed trace/accuracy cache for model cells.
+
+A *cell* is one point of the model subspace: ``(workload, num_steps,
+population, seed)``.  Resolving a cell means training (or loading) the
+model, dumping its per-layer spike traces, and measuring accuracy — the
+expensive leg of co-exploration.  The cache guarantees each cell trains at
+most once, across repeated sweeps AND across processes:
+
+* **Key** — sha256 over the workload's canonical ``signature()`` (topology
+  template, dataset knobs, training recipe, ``version``) plus the model-axis
+  assignment and seed.  Any change to anything that affects the trained
+  artifact changes the key; bumping ``Workload.version`` invalidates.
+* **Storage** — layered on ``repro.checkpoint.store``: the params pytree and
+  the per-layer (T, S) trace counts publish atomically as one checkpoint
+  under ``<root>/<key>/step_00000000``, so a crash mid-save never corrupts a
+  cell and concurrent trainers of the same cell race benignly (deterministic
+  training => identical bytes; last ``os.replace`` wins).  A ``meta.msgpack``
+  sidecar (also atomically replaced) holds accuracy, the quantized-accuracy
+  table, and the human-readable key fields; its presence marks the cell
+  complete.
+* **Restore** — the ``like`` tree the checkpoint store needs is rebuilt from
+  the workload alone (``snn.init_params`` structure + zero count arrays), so
+  no pickled structure is ever trusted.
+
+``TraceCache.resolve`` is the single entry point; it also lazily extends the
+cell's quantized-accuracy table (``validate.quantized_accuracy`` at the
+requested ``weight_bits`` values) for rate-encoded MLP workloads — the
+accuracy leg of the ``weight_bits`` hardware axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+from repro.checkpoint import store
+from repro.core import encoding, snn, train_snn, validate
+from repro.core.workloads.registry import Workload
+
+_META = "meta.msgpack"
+_QUANT_SAMPLES = 64          # test samples for the fixed-point accuracy leg
+
+
+def default_root() -> str:
+    return os.environ.get(
+        "REPRO_WORKLOAD_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro", "workloads"))
+
+
+def cell_key(workload: Workload, assignment: dict, seed: int) -> str:
+    """Content hash of everything that determines the trained artifact."""
+    payload = {
+        "workload": workload.signature(),
+        "assignment": {k: assignment[k] for k in sorted(assignment)},
+        "seed": int(seed),
+    }
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:24]
+
+
+@dataclasses.dataclass
+class CellArtifact:
+    """One resolved model cell: trained params + traces + accuracy."""
+    workload: str
+    assignment: dict                 # {"num_steps": T, "population": p, ...}
+    key: str
+    snn_cfg: snn.SNNConfig
+    params: Any                      # numpy pytree (list of {"w","b"} dicts)
+    accuracy: float                  # float-datapath test accuracy
+    counts: list[np.ndarray]         # per spiking layer, (T, S) sampled traffic
+    quant_acc: dict[int, float]      # weight_bits -> fixed-point accuracy
+    cache_hit: bool
+
+    def accuracy_at(self, weight_bits: Optional[int] = None) -> float:
+        """Accuracy under a hardware precision choice: the fixed-point
+        datapath accuracy when measured at these bits, else the float one."""
+        if weight_bits is not None and int(weight_bits) in self.quant_acc:
+            return self.quant_acc[int(weight_bits)]
+        return self.accuracy
+
+
+class TraceCache:
+    def __init__(self, root: Optional[str] = None):
+        self.root = root or default_root()
+        self.hits = 0
+        self.misses = 0
+
+    # ---- public -----------------------------------------------------------
+    def resolve(self, workload: Workload, assignment: dict, seed: int = 0,
+                quant_bits: Sequence[int] = ()) -> CellArtifact:
+        """Train-or-load one cell.  ``assignment`` must provide ``num_steps``
+        and may provide ``population`` (default 1.0).  ``quant_bits``: weight
+        precisions whose fixed-point accuracy the caller needs (rate-encoded
+        MLPs only — the datapath ``validate`` models; silently skipped
+        otherwise) — computed once and appended to the cell's metadata."""
+        T = int(assignment["num_steps"])
+        pop = float(assignment.get("population", 1.0))
+        norm = {"num_steps": T, "population": pop}
+        key = cell_key(workload, norm, seed)
+        cfg = workload.build(T, pop)
+        cell_dir = os.path.join(self.root, key)
+
+        meta = self._read_meta(cell_dir)
+        if meta is not None:
+            params, counts = self._load_arrays(cell_dir, workload, cfg, T)
+            self.hits += 1
+            hit = True
+        else:
+            params, counts, accuracy = self._train(workload, cfg, T, seed)
+            meta = {"workload": workload.name, "assignment": norm,
+                    "seed": int(seed), "accuracy": float(accuracy),
+                    "quant_acc": {}}
+            self._write_cell(cell_dir, workload, params, counts, meta)
+            self.misses += 1
+            hit = False
+
+        quant = {int(k): float(v) for k, v in meta["quant_acc"].items()}
+        missing = [int(b) for b in quant_bits if int(b) not in quant]
+        if missing and workload.is_mlp() and workload.encoding == "rate":
+            data = workload.make_data(T)
+            for bits in missing:
+                quant[bits] = _quantized_accuracy(cfg, params, data, bits)
+            # merge over the freshest meta: a concurrent resolver may have
+            # extended the table for other bits while we computed ours (a
+            # lost entry would be benignly recomputed, but don't invite it)
+            meta = self._read_meta(cell_dir) or meta
+            quant = {**{int(k): float(v)
+                        for k, v in meta["quant_acc"].items()}, **quant}
+            meta["quant_acc"] = {str(b): a for b, a in quant.items()}
+            self._write_meta(cell_dir, meta)
+
+        return CellArtifact(
+            workload=workload.name, assignment=norm, key=key, snn_cfg=cfg,
+            params=params, accuracy=float(meta["accuracy"]), counts=counts,
+            quant_acc=quant, cache_hit=hit)
+
+    # ---- internals --------------------------------------------------------
+    def _train(self, workload: Workload, cfg: snn.SNNConfig, T: int,
+               seed: int):
+        data = workload.make_data(T)
+        res = train_snn.train(cfg, data, steps=workload.train_steps,
+                              batch_size=workload.batch_size,
+                              lr=workload.lr, seed=seed)
+        traces = train_snn.dump_traces(cfg, res.params, data.x_test,
+                                       max_samples=workload.trace_samples)
+        params = jax.tree.map(np.asarray, res.params)
+        counts = [np.asarray(c, np.float32)
+                  for c in traces["layer_input_spike_counts"]]
+        return params, counts, res.test_accuracy
+
+    def _like_tree(self, workload: Workload, cfg: snn.SNNConfig, T: int):
+        """Checkpoint target structure, rebuilt from the workload alone."""
+        params_like = snn.init_params(jax.random.key(0), cfg)
+        S = min(workload.trace_samples, workload.n_test)
+        counts_like = [np.zeros((T, S), np.float32)
+                       for _ in cfg.layer_sizes()]
+        return {"counts": counts_like, "params": params_like}
+
+    def _load_arrays(self, cell_dir: str, workload: Workload,
+                     cfg: snn.SNNConfig, T: int):
+        like = self._like_tree(workload, cfg, T)
+        tree = store.restore(cell_dir, like, step=0)
+        params = jax.tree.map(np.asarray, tree["params"])
+        counts = [np.asarray(c) for c in tree["counts"]]
+        return params, counts
+
+    def _write_cell(self, cell_dir: str, workload: Workload, params,
+                    counts: list[np.ndarray], meta: dict) -> None:
+        store.save(cell_dir, 0, {"counts": counts, "params": params})
+        self._write_meta(cell_dir, meta)       # meta last: marks completion
+
+    def _write_meta(self, cell_dir: str, meta: dict) -> None:
+        os.makedirs(cell_dir, exist_ok=True)
+        tmp = os.path.join(cell_dir, _META + ".tmp")
+        with open(tmp, "wb") as f:
+            f.write(msgpack.packb(meta))
+        os.replace(tmp, os.path.join(cell_dir, _META))
+
+    def _read_meta(self, cell_dir: str) -> Optional[dict]:
+        path = os.path.join(cell_dir, _META)
+        if not os.path.exists(path):
+            return None
+        with open(path, "rb") as f:
+            return msgpack.unpackb(f.read())
+
+    @property
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses}
+
+
+def _quantized_accuracy(cfg: snn.SNNConfig, params, data, bits: int) -> float:
+    """Fixed-point datapath accuracy at ``bits``-bit weights (MLP only)."""
+    weights = [np.asarray(p["w"]) for p in params]
+    biases = [np.asarray(p["b"]) for p in params]
+    n = min(_QUANT_SAMPLES, len(data.x_test))
+    x = jnp.asarray(data.x_test[:n]).reshape(n, -1)
+    spikes = np.asarray(encoding.rate_encode(
+        jax.random.key(1), x, cfg.num_steps)).astype(np.int64)
+    return validate.quantized_accuracy(
+        weights, biases, spikes, data.y_test[:n],
+        num_classes=cfg.num_classes, frac_bits=int(bits) - 1)

@@ -87,6 +87,85 @@ class TestPipeline:
             np.testing.assert_allclose(vec[i], scalar)
 
 
+class TestPipelineInvariants:
+    """Structural properties of the exact layer-pipeline recurrence."""
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_single_layer_reduces_to_running_sum(self, seed):
+        rng = np.random.default_rng(seed)
+        lat = rng.uniform(0, 20, size=(1, 17))
+        assert float(cycle_model.pipeline_latency(lat)) == \
+            pytest.approx(lat.sum())
+
+    @pytest.mark.parametrize("pos", [0, 1, 2, 3])
+    def test_zero_latency_layer_is_noop(self, pos):
+        rng = np.random.default_rng(11)
+        lat = rng.uniform(1, 10, size=(3, 12))
+        with_zero = np.insert(lat, pos, 0.0, axis=0)
+        np.testing.assert_allclose(cycle_model.pipeline_latency(with_zero),
+                                   cycle_model.pipeline_latency(lat))
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_batched_equals_per_candidate_scalar(self, seed):
+        """(L, T, C) batched evaluation == C independent (L, T) scalars."""
+        rng = np.random.default_rng(seed)
+        lat = rng.uniform(0, 15, size=(4, 9, 6))
+        batched = cycle_model.pipeline_latency(lat)
+        assert batched.shape == (6,)
+        for c in range(lat.shape[2]):
+            np.testing.assert_allclose(batched[c],
+                                       cycle_model.pipeline_latency(
+                                           lat[:, :, c]))
+
+    def test_latency_seconds_forwards_batched_kwargs(self):
+        """The wall-clock wrapper accepts the same candidate matrices as
+        latency_cycles (it used to silently support only the scalar path)."""
+        cfg = _fc_cfg(T=4)
+        counts = [np.full(4, 12.0)] * 2
+        lhr = np.array([[1, 1], [4, 2], [10, 5]])
+        mem = np.array([[0, 0], [2, 2], [4, 1]])
+        pw = np.array([50, 100, 100])
+        sec = cycle_model.latency_seconds(cfg, counts, lhr_matrix=lhr,
+                                          mem_blocks_matrix=mem,
+                                          penc_width=pw)
+        cyc = cycle_model.latency_cycles(cfg, counts, lhr_matrix=lhr,
+                                         mem_blocks_matrix=mem,
+                                         penc_width=pw)
+        assert sec.shape == (3,)
+        np.testing.assert_allclose(sec, cyc / (cfg.timing.clock_mhz * 1e6))
+
+    def test_latency_seconds_per_candidate_clock(self):
+        """A sweep with a clock_mhz axis gets each candidate's seconds at
+        its own clock, not the base config's."""
+        cfg = _fc_cfg(T=4)
+        counts = [np.full(4, 12.0)] * 2
+        lhr = np.array([[1, 1], [4, 2]])
+        clk = np.array([100.0, 200.0])
+        sec = cycle_model.latency_seconds(cfg, counts, lhr_matrix=lhr,
+                                          clock_mhz=clk)
+        cyc = cycle_model.latency_cycles(cfg, counts, lhr_matrix=lhr)
+        np.testing.assert_allclose(sec, cyc / (clk * 1e6))
+
+
+class TestCountsFromTraces:
+    def test_mean_over_sample_axes_and_retention(self):
+        rng = np.random.default_rng(0)
+        raw = [rng.uniform(0, 30, size=(5, 8)), rng.uniform(0, 30, size=(5,))]
+        out = cycle_model.counts_from_traces(raw, pool_before=[False, True],
+                                             pool_retention=0.5)
+        np.testing.assert_allclose(out[0], raw[0].mean(axis=1))
+        np.testing.assert_allclose(out[1], raw[1] * 0.5)
+
+    def test_counts_from_averages_matches_manual(self):
+        cfg = _fc_cfg(T=6)
+        cfg = dataclasses.replace(
+            cfg, timing=dataclasses.replace(cfg.timing, pool_retention=0.7))
+        got = cycle_model.counts_from_averages(cfg, [10.0, 20.0],
+                                               pool_before=[False, True])
+        np.testing.assert_allclose(got[0], np.full(6, 10.0))
+        np.testing.assert_allclose(got[1], np.full(6, 20.0 * 0.7))
+
+
 class TestResources:
     def test_monotone_in_lhr(self):
         lo = resources.estimate(_fc_cfg(lhr=(1, 1)))

@@ -1,0 +1,294 @@
+"""Tests for the model-hardware co-exploration engine: model axes in the
+declarative space, cell factorization, accuracy as a Pareto objective,
+exact hardware-numerics equivalence with the PR-1 engine on a fixed model
+cell, and train-exactly-once semantics via the trace cache."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import dse, snn, workloads
+from repro.core.accelerator import arch, cycle_model
+
+
+def _tiny_wl():
+    return dataclasses.replace(
+        workloads.get("mnist-mlp"), name="co-test-wl",
+        layers=(snn.Dense(12),), pcr=1,
+        n_train=128, n_test=64, train_steps=4, trace_samples=16)
+
+
+def _tiny_conv():
+    return dataclasses.replace(
+        workloads.get("dvs-conv"), name="co-test-dvs",
+        layers=(snn.Conv(2, 3), snn.MaxPool(2), snn.Dense(6)),
+        num_classes=4, pcr=1, n_train=32, n_test=16, train_steps=2,
+        batch_size=16, trace_samples=8)
+
+
+@pytest.fixture(scope="module")
+def shared_cache(tmp_path_factory):
+    """One cache for the whole module so each cell trains exactly once."""
+    return workloads.TraceCache(root=str(tmp_path_factory.mktemp("cells")))
+
+
+class TestModelAxes:
+    def test_add_model_and_factorization(self):
+        cfg = arch.from_layer_sizes("t", (100, 50, 20), num_steps=4)
+        space = (dse.SearchSpace(cfg)
+                 .add_model("num_steps", (4, 8))
+                 .add_model("population", (0.5, 1.0))
+                 .add_per_layer("lhr", [[1, 2], [1, 2]]))
+        assert space.size == 2 * 2 * 2 * 2
+        assert [ax.name for ax in space.model_axes] == ["num_steps",
+                                                        "population"]
+        assert [ax.name for ax in space.hw_axes] == ["lhr", "lhr"]
+        cells = list(space.model_cells())
+        assert len(cells) == 4
+        assert cells[0] == {"num_steps": 4, "population": 0.5}
+        assert cells[-1] == {"num_steps": 8, "population": 1.0}
+
+    def test_add_model_rejects_hardware_names(self):
+        cfg = arch.from_layer_sizes("t", (100, 50), num_steps=2)
+        with pytest.raises(ValueError, match="unknown model axis"):
+            dse.SearchSpace(cfg).add_model("lhr", (1, 2))
+        with pytest.raises(ValueError, match="model axis"):
+            dse.SearchSpace(cfg).add_global("num_steps", (4, 8))
+
+    def test_search_rejects_model_axes(self):
+        cfg = arch.from_layer_sizes("t", (100, 50), num_steps=2)
+        space = (dse.SearchSpace(cfg)
+                 .add_per_layer("lhr", [[1, 2]])
+                 .add_model("num_steps", (2, 4)))
+        with pytest.raises(ValueError, match="coexplore"):
+            dse.search(cfg, [np.ones(2)], space)
+
+    def test_hardware_subspace_rebinds_and_clamps_lhr(self):
+        big = arch.from_layer_sizes("big", (100, 64), num_steps=2)
+        small = arch.from_layer_sizes("small", (100, 3), num_steps=2)
+        space = (dse.SearchSpace(big)
+                 .add_model("num_steps", (2, 4))
+                 .add_per_layer("lhr", [[1, 4, 16, 64]])
+                 .add_global("weight_bits", (4, 8)))
+        sub = space.hardware_subspace(small)
+        assert not sub.model_axes
+        lhr_ax = [ax for ax in sub.axes if ax.name == "lhr"][0]
+        assert lhr_ax.values == (1, 3)        # 4/16/64 clamp to 3, deduped
+        assert sub.size == 2 * 2
+
+    def test_hardware_subspace_joint_axes_checked_and_clamped(self):
+        big = arch.from_layer_sizes("big", (100, 64, 32), num_steps=2)
+        small = arch.from_layer_sizes("small", (100, 3, 2), num_steps=2)
+        space = (dse.SearchSpace(big)
+                 .add_model("num_steps", (2,))
+                 .add_joint("lhr", [(1, 1), (64, 32)]))
+        sub = space.hardware_subspace(small)
+        assert sub.axes[0].values == ((1, 1), (3, 2))   # clamped per layer
+        narrow = arch.from_layer_sizes("narrow", (100, 3), num_steps=2)
+        with pytest.raises(ValueError, match="hw_space"):
+            space.hardware_subspace(narrow)
+
+    def test_no_model_axes_single_empty_cell(self):
+        cfg = arch.from_layer_sizes("t", (100, 50), num_steps=2)
+        space = dse.SearchSpace(cfg).add_per_layer("lhr", [[1, 2]])
+        assert list(space.model_cells()) == [{}]
+
+
+class TestCoExplore:
+    def test_joint_sweep_accuracy_aware_frontier(self, shared_cache):
+        """The acceptance sweep: (num_steps x population x per-layer LHR x
+        weight_bits) in ONE call, accuracy-aware frontier out."""
+        res = dse.coexplore(_tiny_wl(), num_steps=(2, 3),
+                            population=(0.5, 1.0), max_lhr=4,
+                            weight_bits=(4, 8), cache=shared_cache,
+                            chunk_size=32)
+        assert len(res.cells) == 4
+        # 2 layers x 3 lhr options x 2 bits = 18 hw candidates per cell
+        assert res.n_evaluated == 4 * (3 * 3 * 2)
+        fr = res.frontier
+        assert 0 < len(fr) <= res.n_evaluated
+        for col in ("num_steps", "population", "lhr", "weight_bits",
+                    "accuracy", "error", "cycles", "lut", "bram", "energy"):
+            assert col in fr.columns, col
+        np.testing.assert_allclose(fr.columns["error"],
+                                   1.0 - fr.columns["accuracy"])
+        # frontier is mutually non-dominated over the objectives
+        obj = np.stack([fr.columns[k] for k in res.objectives], axis=1)
+        assert dse.pareto_mask_k(obj).all()
+        # accuracy column follows the cell's quantized table
+        cell = {(c.assignment["num_steps"], c.assignment["population"]):
+                c for c in res.cells}
+        for i in range(len(fr)):
+            r = fr.row(i)
+            c = cell[(r["num_steps"], r["population"])]
+            assert r["accuracy"] == c.quant_acc[r["weight_bits"]]
+
+    def test_each_cell_trains_exactly_once(self, shared_cache):
+        """Repeat of the acceptance sweep: zero new training, identical
+        frontier."""
+        misses_before = shared_cache.misses
+        res = dse.coexplore(_tiny_wl(), num_steps=(2, 3),
+                            population=(0.5, 1.0), max_lhr=4,
+                            weight_bits=(4, 8), cache=shared_cache,
+                            chunk_size=32)
+        assert shared_cache.misses == misses_before
+        assert all(c.cache_hit for c in res.cells)
+
+    def test_fixed_cell_matches_hardware_only_engine_exactly(
+            self, shared_cache):
+        """With the model axes pinned, coexplore's hardware numerics equal
+        dse.search on the same cell, row for row."""
+        wl = _tiny_wl()
+        res = dse.coexplore(wl, num_steps=(3,), population=(1.0,),
+                            max_lhr=4, cache=shared_cache)
+        art = shared_cache.resolve(wl, {"num_steps": 3, "population": 1.0})
+        assert art.cache_hit
+        accel = arch.from_snn_config(art.snn_cfg)
+        counts = cycle_model.counts_from_traces(art.counts)
+        ref = dse.search(accel, counts,
+                         dse.SearchSpace.product_lhr(accel, max_lhr=4),
+                         objectives=("cycles", "lut", "energy"))
+        def rows(t):
+            return sorted((tuple(t.columns["lhr"][i]), t.columns["cycles"][i],
+                           t.columns["lut"][i], t.columns["energy"][i])
+                          for i in range(len(t)))
+        assert rows(res.frontier) == rows(ref.frontier)
+
+    def test_declared_space_path(self, shared_cache):
+        """Model + hardware axes declared in ONE SearchSpace."""
+        wl = _tiny_wl()
+        tmpl = arch.from_snn_config(wl.build(2, 1.0))
+        space = (dse.SearchSpace(tmpl)
+                 .add_model("num_steps", (2, 3))
+                 .add_per_layer("lhr", [[1, 2, 4] for _ in tmpl.layers])
+                 .add_global("weight_bits", (4, 8)))
+        res = dse.coexplore(wl, space, cache=shared_cache)
+        assert len(res.cells) == 2
+        assert res.n_evaluated == 2 * (3 * 3 * 2)
+        assert all(c.cache_hit for c in res.cells)   # cells shared w/ above
+
+    def test_keep_all_and_best_under(self, shared_cache):
+        res = dse.coexplore(_tiny_wl(), num_steps=(2, 3),
+                            population=(1.0,), max_lhr=4,
+                            cache=shared_cache, keep_all=True)
+        assert len(res.table) == res.n_evaluated
+        worst = float(np.max(res.table.columns["error"]))
+        row = res.best_under("cycles", error=worst)
+        assert row is not None
+        ok = res.table.columns["error"] <= worst
+        assert row["cycles"] == float(
+            np.min(np.asarray(res.table.columns["cycles"])[ok]))
+        assert res.best_under("cycles", error=-1.0) is None
+
+    def test_objective_validation(self, shared_cache):
+        with pytest.raises(ValueError, match="use 'error'"):
+            dse.coexplore(_tiny_wl(), num_steps=(2,),
+                          objectives=("accuracy", "cycles"),
+                          cache=shared_cache)
+        with pytest.raises(ValueError, match="unknown objective"):
+            dse.coexplore(_tiny_wl(), num_steps=(2,),
+                          objectives=("latency",), cache=shared_cache)
+        with pytest.raises(ValueError, match="workload"):
+            dse.coexplore(num_steps=(2,), cache=shared_cache)
+
+    def test_cross_topology_dataset_axis(self, shared_cache):
+        """End-to-end mixed-topology sweep: dataset axis, -1 padding of the
+        narrower cell's per-layer columns, string dataset column surviving
+        the frontier merge.  Workload instances pass straight through the
+        ``datasets=`` kwarg without registry registration."""
+        mlp = _tiny_wl()                               # 2 spiking layers
+        conv = _tiny_conv()                            # 3 spiking layers
+        res = dse.coexplore(datasets=(mlp, conv), num_steps=(2,),
+                            max_lhr=2, cache=shared_cache)
+        assert len(res.cells) == 2
+        fr = res.frontier
+        assert set(fr.columns["dataset"]) <= {"co-test-wl", "co-test-dvs"}
+        lhr = np.asarray(fr.columns["lhr"])
+        assert lhr.shape[1] == 3                       # widest cell
+        is_mlp = np.asarray(fr.columns["dataset"]) == "co-test-wl"
+        assert is_mlp.any() and (~is_mlp).any()        # both survive a tie
+        assert (lhr[is_mlp, 2] == -1).all()            # absent layer padded
+        assert (lhr[~is_mlp] >= 1).all()
+
+    def test_dataset_axis_in_space_normalizes_instances(self, shared_cache):
+        """Workload instances declared via add_model('dataset', ...) reach
+        the frontier as names, same as the datasets= kwarg path."""
+        mlp, conv = _tiny_wl(), _tiny_conv()
+        tmpl = arch.from_snn_config(mlp.build(2, 1.0))
+        space = (dse.SearchSpace(tmpl)
+                 .add_model("dataset", (mlp, conv))
+                 .add_model("num_steps", (2,)))
+        res = dse.coexplore(space=space, max_lhr=2, cache=shared_cache)
+        assert sorted(c.workload for c in res.cells) == ["co-test-dvs",
+                                                         "co-test-wl"]
+        assert set(res.frontier.columns["dataset"]) <= {"co-test-wl",
+                                                        "co-test-dvs"}
+
+    def test_mismatched_default_num_steps_rejected(self, shared_cache):
+        """Omitting num_steps across workloads with different declared
+        choices must raise, not silently sweep the first one's choices."""
+        with pytest.raises(ValueError, match="num_steps_choices"):
+            dse.coexplore(datasets=(_tiny_wl(), _tiny_conv()),
+                          cache=shared_cache)
+
+    def test_unknown_hw_axis_rejected_before_training(self, tmp_path):
+        """A typo'd hardware axis name fails in the prepass, not after the
+        first cell has trained."""
+        wl = _tiny_wl()
+        fresh = workloads.TraceCache(root=str(tmp_path))
+        with pytest.raises(ValueError, match="evaluator"):
+            dse.coexplore(
+                wl, num_steps=(2,), cache=fresh,
+                hw_space=lambda c: dse.SearchSpace(c).add_global(
+                    "clock", (100, 200)))
+        with pytest.raises(ValueError, match="no axes"):
+            dse.coexplore(wl, num_steps=(2,), cache=fresh,
+                          hw_space=lambda c: dse.SearchSpace(c))
+        assert fresh.stats == {"hits": 0, "misses": 0}
+
+    def test_inconsistent_hw_space_rejected_before_training(self, tmp_path):
+        """A hw_space callable emitting different axis sets per cell fails
+        upfront — before any cell trains."""
+        wl = _tiny_wl()
+        calls = []
+
+        def hw(cfg):
+            sub = dse.SearchSpace.product_lhr(cfg, max_lhr=2)
+            if not calls:
+                sub.add_global("weight_bits", (4,))
+            calls.append(1)
+            return sub
+
+        fresh = workloads.TraceCache(root=str(tmp_path))
+        with pytest.raises(ValueError, match="share axis names"):
+            dse.coexplore(wl, num_steps=(2, 3), hw_space=hw, cache=fresh)
+        assert fresh.stats == {"hits": 0, "misses": 0}
+
+    def test_space_model_axes_and_kwargs_conflict(self, shared_cache):
+        """Model axes may come from the space OR the kwargs, never both —
+        mixing used to silently drop the kwargs."""
+        wl = _tiny_wl()
+        tmpl = arch.from_snn_config(wl.build(2, 1.0))
+        space = (dse.SearchSpace(tmpl)
+                 .add_model("num_steps", (2, 3))
+                 .add_per_layer("lhr", [[1, 2] for _ in tmpl.layers]))
+        with pytest.raises(ValueError, match="one declaration style"):
+            dse.coexplore(wl, space, datasets=("mnist-mlp",),
+                          cache=shared_cache)
+        with pytest.raises(ValueError, match="one declaration style"):
+            dse.coexplore(wl, space, population=(0.5,), cache=shared_cache)
+
+    def test_hw_kwargs_and_custom_subspace_conflict(self, shared_cache):
+        """max_lhr / weight_bits only shape the DEFAULT hardware subspace —
+        next to a declared one they used to be silently dropped."""
+        wl = _tiny_wl()
+        tmpl = arch.from_snn_config(wl.build(2, 1.0))
+        space = (dse.SearchSpace(tmpl)
+                 .add_model("num_steps", (2,))
+                 .add_per_layer("lhr", [[1, 2] for _ in tmpl.layers]))
+        with pytest.raises(ValueError, match="one declaration style"):
+            dse.coexplore(wl, space, weight_bits=(4, 8), cache=shared_cache)
+        with pytest.raises(ValueError, match="one declaration style"):
+            dse.coexplore(
+                wl, num_steps=(2,), max_lhr=4, cache=shared_cache,
+                hw_space=lambda c: dse.SearchSpace.product_lhr(c, max_lhr=2))

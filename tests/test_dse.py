@@ -93,6 +93,20 @@ class TestParetoAccumulator:
         acc.update(dse.CandidateTable({"x": np.array([3.0, 1.0, 2.0])}))
         np.testing.assert_array_equal(acc.frontier.columns["x"], [1.0])
 
+    def test_string_columns_supported(self):
+        """Non-numeric columns (the coexplore ``dataset`` axis) survive the
+        merge: distinct datasets with tied objectives both stay, exact
+        re-evaluations still dedup."""
+        acc = dse.ParetoAccumulator(("cycles",))
+        chunk = dse.CandidateTable(
+            {"dataset": np.array(["mnist", "dvs"]),
+             "cycles": np.array([5.0, 5.0])})
+        acc.update(chunk)
+        acc.update(chunk)                       # exact re-evaluation
+        assert len(acc.frontier) == 2
+        assert sorted(acc.frontier.columns["dataset"].tolist()) == \
+            ["dvs", "mnist"]
+
     def test_reevaluated_candidate_kept_once(self):
         """Re-visiting the same candidate (Random/EvolutionarySearch) must
         not inflate the frontier, while distinct candidates with tied

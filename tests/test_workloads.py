@@ -1,0 +1,174 @@
+"""Tests for the workload registry and the content-addressed trace/accuracy
+cache: population scaling, cache key sensitivity, train-or-load roundtrip,
+hit/miss accounting, and the lazily extended quantized-accuracy table."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import snn, workloads
+
+
+def _tiny(**kw):
+    base = dict(
+        name="tiny-wl", dataset="mnist", input_shape=(28, 28),
+        layers=(snn.Dense(10),), num_classes=10, pcr=1,
+        n_train=128, n_test=64, train_steps=4, trace_samples=16)
+    base.update(kw)
+    return workloads.Workload(**base)
+
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        assert {"mnist-mlp", "fmnist-mlp", "dvs-conv"} <= set(
+            workloads.names())
+
+    def test_get_unknown_raises(self):
+        with pytest.raises(KeyError, match="unknown workload"):
+            workloads.get("no-such-workload")
+
+    def test_duplicate_register_rejected(self):
+        wl = workloads.get("mnist-mlp")
+        with pytest.raises(ValueError, match="already registered"):
+            workloads.register(wl)
+
+    def test_dataset_encoding_validation(self):
+        with pytest.raises(ValueError, match="requires 'event'"):
+            _tiny(dataset="dvs", input_shape=(32, 32, 2))
+        with pytest.raises(ValueError, match="unknown dataset"):
+            _tiny(dataset="cifar")
+
+
+class TestBuild:
+    def test_population_scales_widths(self):
+        wl = _tiny(layers=(snn.Dense(64), snn.Dense(32)))
+        cfg = wl.build(8, 0.5)
+        assert cfg.num_steps == 8
+        assert [l.features for l in cfg.layers] == [32, 16, 10]
+        cfg2 = wl.build(8, 2.0)
+        assert [l.features for l in cfg2.layers] == [128, 64, 10]
+
+    def test_classifier_never_scaled_and_floor_of_one(self):
+        wl = _tiny(layers=(snn.Dense(4),), pcr=3)
+        cfg = wl.build(2, 0.01)
+        assert cfg.layers[0].features == 1          # floor, not zero
+        assert cfg.layers[-1].features == 10 * 3    # classifier untouched
+
+    def test_pool_layers_pass_through(self):
+        wl = workloads.get("dvs-conv")
+        cfg = wl.build(8, 2.0)
+        kinds = [type(l).__name__ for l in cfg.layers]
+        assert kinds == ["Conv", "MaxPool", "Conv", "MaxPool", "Dense",
+                         "Dense"]
+        assert cfg.layers[0].features == 16         # 8 * 2.0
+
+    def test_event_data_generated_at_cell_T(self):
+        wl = workloads.get("dvs-conv")
+        wl = dataclasses.replace(wl, name="dvs-tiny", n_train=8, n_test=4)
+        data = wl.make_data(num_steps=5)
+        assert data.x_train.shape[1] == 5           # (N, T, H, W, 2)
+
+
+class TestCacheKey:
+    def test_stable_and_assignment_sensitive(self):
+        wl = _tiny()
+        a = {"num_steps": 4, "population": 1.0}
+        assert workloads.cell_key(wl, a, 0) == workloads.cell_key(wl, a, 0)
+        assert workloads.cell_key(wl, a, 0) != workloads.cell_key(wl, a, 1)
+        assert workloads.cell_key(wl, a, 0) != workloads.cell_key(
+            wl, {"num_steps": 8, "population": 1.0}, 0)
+        assert workloads.cell_key(wl, a, 0) != workloads.cell_key(
+            wl, {"num_steps": 4, "population": 2.0}, 0)
+
+    def test_recipe_and_version_sensitive(self):
+        wl = _tiny()
+        a = {"num_steps": 4, "population": 1.0}
+        assert workloads.cell_key(wl, a, 0) != workloads.cell_key(
+            dataclasses.replace(wl, train_steps=5), a, 0)
+        assert workloads.cell_key(wl, a, 0) != workloads.cell_key(
+            dataclasses.replace(wl, version=2), a, 0)
+        assert workloads.cell_key(wl, a, 0) != workloads.cell_key(
+            dataclasses.replace(wl, layers=(snn.Dense(11),)), a, 0)
+
+
+class TestTraceCache:
+    def test_train_once_then_hit(self, tmp_path):
+        wl = _tiny()
+        cache = workloads.TraceCache(root=str(tmp_path))
+        a = cache.resolve(wl, {"num_steps": 2, "population": 1.0}, seed=0)
+        assert not a.cache_hit
+        assert cache.stats == {"hits": 0, "misses": 1}
+        assert len(a.counts) == 2                   # hidden + classifier in
+        assert a.counts[0].shape == (2, 16)         # (T, trace_samples)
+        b = cache.resolve(wl, {"num_steps": 2, "population": 1.0}, seed=0)
+        assert b.cache_hit
+        assert cache.stats == {"hits": 1, "misses": 1}
+        # the loaded artifact is byte-identical to the trained one
+        assert b.accuracy == a.accuracy
+        for ca, cb in zip(a.counts, b.counts):
+            np.testing.assert_array_equal(ca, cb)
+        for pa, pb in zip(a.params, b.params):
+            np.testing.assert_array_equal(pa["w"], pb["w"])
+            np.testing.assert_array_equal(pa["b"], pb["b"])
+
+    def test_distinct_cells_distinct_artifacts(self, tmp_path):
+        wl = _tiny()
+        cache = workloads.TraceCache(root=str(tmp_path))
+        a = cache.resolve(wl, {"num_steps": 2, "population": 1.0})
+        b = cache.resolve(wl, {"num_steps": 2, "population": 0.5})
+        assert a.key != b.key
+        assert a.snn_cfg.layers[0].features != b.snn_cfg.layers[0].features
+        assert cache.stats == {"hits": 0, "misses": 2}
+
+    def test_quant_accuracy_lazily_extended_and_cached(self, tmp_path):
+        wl = _tiny()
+        cache = workloads.TraceCache(root=str(tmp_path))
+        a = cache.resolve(wl, {"num_steps": 2, "population": 1.0},
+                          quant_bits=(8,))
+        assert set(a.quant_acc) == {8}
+        assert 0.0 <= a.quant_acc[8] <= 1.0
+        # second resolve: hit, and the table extends without retraining
+        b = cache.resolve(wl, {"num_steps": 2, "population": 1.0},
+                          quant_bits=(4, 8))
+        assert b.cache_hit and set(b.quant_acc) == {4, 8}
+        assert b.quant_acc[8] == a.quant_acc[8]
+        # third: fully cached, no recompute path needed
+        c = cache.resolve(wl, {"num_steps": 2, "population": 1.0},
+                          quant_bits=(4, 8))
+        assert c.quant_acc == b.quant_acc
+
+    def test_quant_bits_skipped_for_non_mlp(self, tmp_path):
+        wl = dataclasses.replace(
+            workloads.get("dvs-conv"), name="dvs-cache-test",
+            layers=(snn.Conv(2, 3), snn.MaxPool(2), snn.Dense(8)),
+            n_train=32, n_test=16, train_steps=2, batch_size=16,
+            trace_samples=8)
+        cache = workloads.TraceCache(root=str(tmp_path))
+        a = cache.resolve(wl, {"num_steps": 3, "population": 1.0},
+                          quant_bits=(8,))
+        assert a.quant_acc == {}                    # conv: no fixed-point leg
+        assert a.accuracy_at(8) == a.accuracy
+
+    def test_quant_bits_skipped_for_event_mlp(self, tmp_path):
+        """Dense-only event workloads pass is_mlp() but the fixed-point
+        validator only models the rate-encoded datapath — the quant leg
+        must skip them, not crash on the (N, T, H, W, 2) test set."""
+        wl = workloads.Workload(
+            name="dvs-mlp-cache-test", dataset="dvs", encoding="event",
+            input_shape=(8, 8, 2), layers=(snn.Dense(6),), num_classes=4,
+            n_train=32, n_test=16, train_steps=2, batch_size=16,
+            trace_samples=8)
+        cache = workloads.TraceCache(root=str(tmp_path))
+        a = cache.resolve(wl, {"num_steps": 3, "population": 1.0},
+                          quant_bits=(8,))
+        assert a.quant_acc == {}
+        assert a.accuracy_at(8) == a.accuracy
+
+    def test_accuracy_at_prefers_quantized(self, tmp_path):
+        wl = _tiny()
+        cache = workloads.TraceCache(root=str(tmp_path))
+        a = cache.resolve(wl, {"num_steps": 2, "population": 1.0},
+                          quant_bits=(8,))
+        assert a.accuracy_at(8) == a.quant_acc[8]
+        assert a.accuracy_at(None) == a.accuracy
+        assert a.accuracy_at(16) == a.accuracy      # unmeasured bits: float
