@@ -98,6 +98,8 @@ def run(quick: bool = False):
                   repeat_all_hits=all_hit,
                   repeat_seconds=round(dt2, 2),
                   speedup=round(dt / max(dt2, 1e-9), 1))
+        # auditable Study counters: hit/miss + budget surface on the summary
+        emit_json("coexplore/summary", **res2.summary)
         if not all_hit:
             raise AssertionError("repeat coexplore retrained a cell: "
                                  f"{[c.cache_hit for c in res2.cells]}")

@@ -1,0 +1,101 @@
+"""Budgeted joint-strategy exploration benchmark: the ask/tell ``explore``
+driver searching the full (num_steps x population x per-layer LHR x
+weight_bits) digit space with ``EvolutionarySearch`` under a training
+budget in cache misses.
+
+This is the NAS-style loop the exhaustive ``coexplore`` cell grid cannot
+express: the strategy decides which model cells are worth training, the
+budget caps how many actually train, and candidates in unaffordable cells
+bounce back to the strategy as ``+inf``.  JSON lines report the frontier,
+candidate throughput, the cache hit/miss counters, and the budget audit —
+plus a checkpoint/resume round-trip check (a resumed study must finish
+with the identical frontier and zero retraining).
+"""
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit_json
+from repro.core import dse, snn, workloads
+from repro.core.accelerator import arch
+
+
+def _workload(quick: bool) -> workloads.Workload:
+    base = workloads.get("mnist-mlp")
+    return dataclasses.replace(
+        base, name="bench-explore-mlp",
+        layers=(snn.Dense(24 if quick else 48),),
+        pcr=2, n_train=256 if quick else 768, n_test=128,
+        train_steps=20 if quick else 80, trace_samples=32)
+
+
+def run(quick: bool = False):
+    wl = _workload(quick)
+    t_values = (2, 4) if quick else (2, 4, 8)
+    pops = (0.5, 1.0) if quick else (0.5, 1.0, 2.0)
+    n_cells = len(t_values) * len(pops)
+    budget = max(1, n_cells // 2)             # train at most half the grid
+    tmpl = arch.from_snn_config(wl.build(t_values[0], 1.0))
+    space = (dse.SearchSpace(tmpl)
+             .add_model("num_steps", t_values)
+             .add_model("population", pops)
+             .add_per_layer("lhr", [[1, 2, 4, 8] for _ in tmpl.layers])
+             .add_global("weight_bits", (4, 8)))
+    make = lambda: dse.EvolutionarySearch(
+        population=16 if quick else 32,
+        generations=4 if quick else 8, seed=0)
+
+    with tempfile.TemporaryDirectory() as root:
+        cache = workloads.TraceCache(root=f"{root}/cells")
+        t0 = time.perf_counter()
+        study = dse.explore(space, workload=wl, cache=cache,
+                            strategy=make(), train_budget=budget,
+                            checkpoint_dir=f"{root}/study")
+        dt = time.perf_counter() - t0
+        s = study.summary
+        emit_json("explore/joint_budgeted",
+                  cells_in_grid=n_cells, train_budget=budget,
+                  cells_resolved=s["cells_resolved"],
+                  cells_skipped=s["cells_skipped"],
+                  cache=s["cache"],
+                  budget_spent=s["train_budget"]["spent"],
+                  budget_remaining=s["train_budget"]["remaining"],
+                  candidates=study.n_evaluated,
+                  frontier=len(study.frontier),
+                  seconds=round(dt, 2),
+                  cands_per_sec=round(study.n_evaluated / max(dt, 1e-9)))
+        if cache.misses > budget:
+            raise AssertionError(
+                f"budget violated: {cache.misses} misses > {budget}")
+
+        # resume audit: re-opening the finished study retrains nothing and
+        # keeps the exact frontier
+        cache2 = workloads.TraceCache(root=f"{root}/cells")
+        t0 = time.perf_counter()
+        resumed = dse.explore(space, workload=wl, cache=cache2,
+                              strategy=make(), train_budget=budget,
+                              checkpoint_dir=f"{root}/study", resume=True)
+        dt2 = time.perf_counter() - t0
+
+        def rows(t):
+            cols = [np.asarray(t.columns[k], np.float64).reshape(len(t), -1)
+                    for k in sorted(t.columns)]
+            a = np.concatenate(cols, axis=1)
+            return a[np.lexsort(a.T)]
+
+        same = bool(np.array_equal(rows(resumed.frontier),
+                                   rows(study.frontier)))
+        emit_json("explore/resume", retrained=cache2.misses,
+                  frontier_matches=same, seconds=round(dt2, 2))
+        if cache2.misses:
+            raise AssertionError("resume retrained a cell")
+        if not same:
+            raise AssertionError("resumed frontier size diverged")
+
+
+if __name__ == "__main__":
+    run()

@@ -82,16 +82,18 @@ def main():
           f"({1-best.lut/base.lut:.0%} fewer LUTs, "
           f"{best.cycles/base_cycles:.1f}x latency)")
 
-    # ---- Joint multi-axis DSE (the new streaming engine) ----
-    # How to define a search space (see DESIGN.md §8 and the repro.core.dse
-    # package docstring):
+    # ---- Joint multi-axis DSE (the unified ask/tell front end) ----
+    # How to define a search space (see DESIGN.md §8/§10 and the
+    # repro.core.dse package docstring):
     #   * add_per_layer — independent options per layer (Cartesian product);
     #   * add_joint     — options are whole per-layer vectors (all layers
     #                     move together);
     #   * add_global    — one value applied to every layer.
-    # Nothing is materialized: chunks of candidates stream through the
-    # vectorized cycle model + component library, and only the k-objective
-    # Pareto frontier is retained.
+    # ``dse.search`` is an exact thin wrapper over ``dse.explore``: the
+    # ask/tell driver streams digit chunks through the vectorized cycle
+    # model + component library and retains only the k-objective Pareto
+    # frontier (call ``dse.explore`` directly for budgets, checkpoints, or
+    # workers — see the co-exploration section below).
     space = (dse.SearchSpace(accel)
              .add_per_layer("lhr", [dse.pow2_values(min(32, l.logical))
                                     for l in accel.layers])
@@ -140,7 +142,7 @@ def main():
     # become searchable axes: each model cell trains once through the
     # content-addressed trace cache, then its hardware subspace streams
     # through the same chunked evaluator, with accuracy (as ``error`` =
-    # 1 - accuracy) a first-class Pareto objective.  See DESIGN.md §9.
+    # 1 - accuracy) a first-class Pareto objective.  See DESIGN.md §9-§10.
     if args.coexplore:
         wl = dataclasses.replace(
             workloads.get("mnist-mlp"), name="example-co",
@@ -163,6 +165,24 @@ def main():
                       f"{str(r['lhr']):>10} {r['weight_bits']:>4} "
                       f"{r['accuracy']:>6.3f} {r['cycles']:>8.0f} "
                       f"{r['lut']/1e3:>7.1f}K")
+
+            # Budgeted NAS-style loop (DESIGN.md §10): an evolutionary
+            # strategy over the FULL joint digit space decides which cells
+            # are worth training — at most train_budget cache misses (the
+            # cells above are already cached, so this costs nothing here).
+            tmpl = hw.from_snn_config(wl.build(4, 1.0))
+            jspace = (dse.SearchSpace(tmpl)
+                      .add_model("num_steps", (4, 8))
+                      .add_model("population", (0.5, 1.0))
+                      .add_per_layer("lhr", [dse.pow2_values(8)
+                                             for _ in tmpl.layers])
+                      .add_global("weight_bits", (4, 8)))
+            budgeted = dse.explore(
+                jspace, workload=wl, train_budget=4,
+                cache=workloads.TraceCache(root=root),
+                strategy=dse.EvolutionarySearch(population=16,
+                                                generations=4, seed=0))
+            print(f"\nbudgeted explore: {budgeted.summary}")
 
 
 if __name__ == "__main__":

@@ -172,12 +172,19 @@ def latest_step(directory: str) -> Optional[int]:
 
 
 def restore(directory: str, like: PyTree, step: Optional[int] = None,
-            shardings: Optional[PyTree] = None) -> PyTree:
+            shardings: Optional[PyTree] = None,
+            device: bool = True) -> PyTree:
     """Restore into the structure of ``like`` (shapes/dtypes validated).
 
     ``shardings``: optional pytree of NamedSharding for the TARGET mesh —
     pass the new mesh's shardings to reshard on restore (elastic restart on
     a different topology).
+
+    ``device=False`` returns host NumPy arrays at the *exact* ``like``
+    dtypes instead of ``jnp`` arrays — required for consumers that must
+    round-trip float64/int64 bit-exactly (e.g. ``dse.Study`` frontier
+    checkpoints), since ``jnp.asarray`` truncates those to 32-bit when
+    x64 is disabled.
     """
     if step is None:
         step = latest_step(directory)
@@ -207,6 +214,9 @@ def restore(directory: str, like: PyTree, step: Optional[int] = None,
         if shardings is not None else [None] * len(host))
     out = []
     for arr, wanted, shard in zip(host, leaves_like, shard_leaves):
+        if not device:
+            out.append(np.asarray(arr, dtype=wanted.dtype))
+            continue
         x = jnp.asarray(arr, dtype=wanted.dtype)
         if shard is not None:
             x = jax.device_put(x, shard)

@@ -1,14 +1,16 @@
 """Design Space Exploration subsystem (paper Sec. IV), unified + streaming.
 
 The paper's contribution is *joint* exploration of hardware and model
-parameters.  This package turns the seed's single-axis LHR sweep into a
-vectorized multi-axis search engine:
+parameters.  This package is a vectorized multi-axis search engine with a
+single ask/tell front end:
 
 * ``space``      — declarative ``SearchSpace``: per-layer LHR, per-layer
                    memory blocks, weight precision, PENC width, clock, as
                    independent / zipped / global axes over an
-                   ``AcceleratorConfig``.  Nothing is materialized; chunks
-                   of flat indices decode to column arrays on demand.
+                   ``AcceleratorConfig`` — plus **model axes**
+                   (``num_steps``, ``population``, ``dataset``) that resolve
+                   by training.  Nothing is materialized; chunks of digit
+                   rows decode to column arrays on demand.
 * ``table``      — ``CandidateTable``: structure-of-arrays storage (NumPy
                    columns for cycles/LUT/REG/BRAM/DSP/energy), no
                    per-candidate Python objects.
@@ -17,54 +19,63 @@ vectorized multi-axis search engine:
 * ``pareto``     — k-objective Pareto mask + chunk-incremental frontier
                    merge, so arbitrarily large spaces stream in the memory
                    of a single chunk.
-* ``strategies`` — exhaustive ``GridSearch``, ``RandomSearch`` sampling, and
-                   a simple ``EvolutionarySearch`` for spaces too big to
-                   enumerate.
-* ``engine``     — ``search``/``SearchResult``/``auto_select`` tying it all
-                   together.
+* ``strategies`` — the ask/tell contract (``ask(n) -> digits``,
+                   ``tell(digits, obj)``): exhaustive ``GridSearch``,
+                   ``RandomSearch`` sampling, and a (mu+lambda)
+                   ``EvolutionarySearch`` — all checkpointable via
+                   ``state_dict``.
+* ``study``      — ``explore(space, ...) -> Study``: the unified driver
+                   that owns chunked evaluation, the Pareto merge,
+                   model-cell resolution with a **training budget in cache
+                   misses**, checkpoint/resume, and ``workers=N`` cell
+                   farming.
+* ``engine``     — ``search``/``SearchResult``/``auto_select``, exact thin
+                   wrappers over ``explore`` for hardware-only spaces.
+* ``coexplore``  — the classic cell-enumerating co-exploration front end,
+                   also a thin wrapper over ``explore``.
 * ``compat``     — the seed API (``sweep``, ``sweep_memory_blocks``,
                    ``sweep_weight_bits``, ``Candidate``/``DSEResult``) as
-                   thin wrappers over the new engine.
+                   thin wrappers over the engine.
 
-How to define a search space
+How to explore a joint space
 ----------------------------
 ::
 
-    from repro.core import dse
-    from repro.core.accelerator import paper_nets
+    from repro.core import dse, workloads
+    from repro.core.accelerator import arch
 
-    cfg = paper_nets.build("net-1")
-    counts = paper_nets.paper_counts("net-1", cfg)
+    wl = workloads.get("mnist-mlp")
+    tmpl = arch.from_snn_config(wl.build(8, 1.0))
 
-    space = (dse.SearchSpace(cfg)
-             # per-layer LHR: independent power-of-two options per layer
-             .add_per_layer("lhr", [dse.pow2_values(min(64, l.logical))
-                                    for l in cfg.layers])
-             # memory blocks: all layers move together (zipped options)
-             .add_joint("mem_blocks",
-                        [tuple(max(1, l.num_nus // d) for l in cfg.layers)
-                         for d in (1, 2, 4)])
-             # weight precision: one global value per candidate
+    space = (dse.SearchSpace(tmpl)
+             # model axes: every combination is a cell that must train
+             .add_model("num_steps", (4, 8, 15))
+             .add_model("population", (0.5, 1.0, 2.0))
+             # hardware axes, rebound (and lhr-clamped) per cell
+             .add_per_layer("lhr", [dse.pow2_values(min(32, l.logical))
+                                    for l in tmpl.layers])
              .add_global("weight_bits", (4, 6, 8)))
 
-    result = dse.search(cfg, counts, space,
-                        objectives=("cycles", "lut", "bram", "energy"))
-    print(result.n_evaluated, len(result.frontier))
-    best = result.best_within_latency(max_cycles=2e4)   # row dict
-    hw = result.config_for(best)                        # AcceleratorConfig
+    study = dse.explore(space, workload=wl,
+                        strategy=dse.EvolutionarySearch(population=32,
+                                                        generations=8),
+                        train_budget=4,          # at most 4 cache misses
+                        checkpoint_dir="/tmp/study")   # resumable
+    print(study.summary)                         # cache + budget counters
+    best = study.best_under("cycles", error=0.1)       # row dict
 
-Spaces past the old 200k cap stream through chunked evaluation — memory
-stays flat and the frontier merge is exact (see tests/test_dse.py).  For
-spaces too large to enumerate, pass ``strategy=dse.RandomSearch(100_000)``
-or ``dse.EvolutionarySearch()``.  See DESIGN.md §8 and
-``examples/train_snn_dse.py`` for the full walkthrough.
+    # interrupted?  continue exactly where the checkpoint left off:
+    study = dse.explore(space, workload=wl, strategy=...,
+                        train_budget=4, checkpoint_dir="/tmp/study",
+                        resume=True)
 
-Model parameters are axes too: ``space.add_model("num_steps", (8, 15, 25))``
-/ ``add_model("population", ...)`` / ``add_model("dataset", ...)`` declare
-the model subspace, and ``dse.coexplore`` (DESIGN.md §9) factors the joint
-space into (model cell) x (hardware subspace), resolving each cell once
-through the ``repro.core.workloads`` trace cache and minimizing ``error``
-(= 1 - accuracy) next to the hardware objectives.
+Hardware-only spaces work the same way (``dse.explore(space,
+counts=counts)``), and ``dse.search`` / ``dse.coexplore`` remain as exact
+thin wrappers for the classic push-style signatures.  Spaces of any size
+stream through chunked evaluation — memory stays flat and the frontier
+merge is exact (see tests/test_dse.py, tests/test_explore.py).  See
+DESIGN.md §8–§10 and ``examples/train_snn_dse.py`` for the full
+walkthrough.
 """
 from repro.core.dse.coexplore import (CO_METRICS, DEFAULT_CO_OBJECTIVES,
                                       CellRecord, CoExploreResult, coexplore)
@@ -79,7 +90,8 @@ from repro.core.dse.pareto import (ParetoAccumulator, any_dominates,
                                    frontier_of, pareto_mask, pareto_mask_k)
 from repro.core.dse.space import MODEL_AXES, Axis, SearchSpace, pow2_values
 from repro.core.dse.strategies import (EvolutionarySearch, GridSearch,
-                                       RandomSearch)
+                                       RandomSearch, Strategy)
+from repro.core.dse.study import Study, explore
 from repro.core.dse.table import CandidateTable
 
 __all__ = [
@@ -87,8 +99,8 @@ __all__ = [
     "CoExploreResult", "DEFAULT_CO_OBJECTIVES", "DEFAULT_OBJECTIVES",
     "DSEResult", "EvolutionarySearch", "GridSearch", "METRICS", "MODEL_AXES",
     "MemBlockCandidate", "ParetoAccumulator", "RandomSearch", "SearchResult",
-    "SearchSpace", "any_dominates", "auto_select", "coexplore",
-    "evaluate_columns", "frontier_of", "lhr_grid", "pareto_mask",
-    "pareto_mask_k", "pow2_values", "search", "sweep", "sweep_memory_blocks",
-    "sweep_spike_train_length", "sweep_weight_bits",
+    "SearchSpace", "Strategy", "Study", "any_dominates", "auto_select",
+    "coexplore", "evaluate_columns", "explore", "frontier_of", "lhr_grid",
+    "pareto_mask", "pareto_mask_k", "pow2_values", "search", "sweep",
+    "sweep_memory_blocks", "sweep_spike_train_length", "sweep_weight_bits",
 ]

@@ -1,4 +1,4 @@
-"""Model–hardware co-exploration (the paper's full five-phase loop).
+"""Model–hardware co-exploration: an exact thin wrapper over ``dse.explore``.
 
 The headline claim of the paper is joint tailoring of "both the hardware and
 model parameters".  ``coexplore`` makes model parameters searchable axes by
@@ -9,10 +9,9 @@ factoring the joint space into
 A *model cell* is one assignment of the model axes (``num_steps``,
 ``population``, ``dataset``).  Each cell resolves **once** through the
 ``workloads.TraceCache`` to trained params, measured accuracy, and per-layer
-spike traces (``snn.spike_counts_per_layer``); its topology derives an
-``AcceleratorConfig`` (``arch.from_snn_config``), and the cell's hardware
-subspace then streams through the existing chunked evaluator
-(``evaluate_columns``) exactly as a PR-1 hardware-only search would — the
+spike traces; its topology derives an ``AcceleratorConfig``
+(``arch.from_snn_config``), and the cell's hardware subspace then streams
+through the chunked evaluator exactly as a hardware-only search would — the
 numerics on a fixed cell are identical by construction (tested).
 
 Accuracy joins cycles/LUT/BRAM/energy as a first-class Pareto objective:
@@ -20,50 +19,35 @@ every candidate row carries ``accuracy`` and ``error`` (= 1 - accuracy)
 columns, and ``error`` is minimized in the shared k-objective accumulator.
 When the hardware subspace has a ``weight_bits`` axis and the workload is a
 rate-encoded MLP, the accuracy is the **fixed-point datapath** accuracy at
-that precision
-(``validate.quantized_accuracy``, cached per (cell, bits)); otherwise the
-float accuracy of the trained cell.
+that precision (``validate.quantized_accuracy``, cached per (cell, bits));
+otherwise the float accuracy of the trained cell.
 
 Per-layer axis columns (``lhr``, ``mem_blocks``) are padded with -1 to the
 widest cell when cells differ in layer count (the ``dataset`` axis mixes
 topologies), so one ``CandidateTable`` holds the whole joint frontier.
+
+The loop itself lives in ``dse.study`` since the ask/tell redesign; this
+wrapper adapts the returned ``Study`` to the classic ``CoExploreResult``
+and forwards the new knobs: ``strategy=`` (a non-grid strategy searches the
+*joint* digit space instead of enumerating cells — requires a declared
+space), ``train_budget=k`` (at most k cache misses), and ``workers=N``
+(parallel cell farming).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence, Union
+from typing import Optional, Sequence, Union
 
-import numpy as np
-
-from repro.core import workloads
-from repro.core.accelerator import arch, cycle_model, resources
-from repro.core.dse.engine import FrontierQueries
-from repro.core.dse.evaluate import AXIS_NAMES, METRICS, evaluate_columns
-from repro.core.dse.pareto import ParetoAccumulator
-from repro.core.dse.space import MODEL_AXES, SearchSpace, iter_cells
-from repro.core.dse.strategies import GridSearch
+from repro.core.accelerator import resources
+from repro.core.dse.strategies import GridSearch, Strategy
+from repro.core.dse.study import (CO_METRICS, DEFAULT_CO_OBJECTIVES,
+                                  CellRecord, FrontierQueries, HwSpaceFn,
+                                  Study, explore)
 from repro.core.dse.table import CandidateTable
-from repro.core.workloads import TraceCache, Workload
+from repro.core.workloads import TraceCache, TrainingBudget, Workload
 
-DEFAULT_CO_OBJECTIVES = ("error", "cycles", "lut", "energy")
-
-#: metric columns a co-exploration row carries beyond the hardware METRICS
-CO_METRICS = METRICS + ("accuracy", "error")
-
-HwSpaceFn = Callable[[arch.AcceleratorConfig], SearchSpace]
-
-
-@dataclasses.dataclass
-class CellRecord:
-    """One resolved model cell and its hardware sub-sweep summary."""
-    workload: str
-    assignment: dict                     # model-axis values for this cell
-    key: str                             # trace-cache content address
-    accuracy: float                      # float-datapath accuracy
-    quant_acc: dict[int, float]          # weight_bits -> fixed-point accuracy
-    cache_hit: bool
-    n_evaluated: int                     # hardware candidates streamed
-    layer_sizes: list[int]
+__all__ = ["CO_METRICS", "DEFAULT_CO_OBJECTIVES", "CellRecord",
+           "CoExploreResult", "HwSpaceFn", "coexplore"]
 
 
 @dataclasses.dataclass
@@ -77,84 +61,26 @@ class CoExploreResult(FrontierQueries):
     n_evaluated: int
     cache: TraceCache
     table: Optional[CandidateTable] = None      # all rows iff keep_all
+    study: Optional[Study] = None               # the underlying Study
 
     @property
     def cache_stats(self) -> dict:
         return self.cache.stats
 
-
-def _model_axis_list(space: Optional[SearchSpace],
-                     workload: Optional[Union[str, Workload]],
-                     num_steps, population, datasets,
-                     resolve: Callable[[Union[str, Workload]], Workload]
-                     ) -> list[tuple]:
-    """Canonical (name, values) list in MODEL_AXES order."""
-    if space is not None and space.model_axes:
-        given = [n for n, v in (("num_steps", num_steps),
-                                ("population", population),
-                                ("datasets", datasets)) if v is not None]
-        if given:
-            raise ValueError(
-                f"model axes declared both in the space "
-                f"({[ax.name for ax in space.model_axes]}) and via kwargs "
-                f"{given}; pick one declaration style")
-        by_name = {ax.name: tuple(ax.values) for ax in space.model_axes}
-        if "dataset" in by_name:          # normalize instances to names
-            by_name["dataset"] = tuple(
-                resolve(d).name for d in by_name["dataset"])
-    else:
-        by_name = {}
-        if datasets is not None:
-            by_name["dataset"] = tuple(resolve(d).name for d in datasets)
-        if num_steps is not None:
-            by_name["num_steps"] = tuple(int(t) for t in num_steps)
-        if population is not None:
-            by_name["population"] = tuple(float(p) for p in population)
-    if "num_steps" not in by_name:
-        wls = ([resolve(d) for d in by_name["dataset"]]
-               if "dataset" in by_name else [resolve(workload)])
-        choices = {wl.name: tuple(wl.num_steps_choices) for wl in wls}
-        if len(set(choices.values())) > 1:
-            raise ValueError(
-                f"the swept workloads declare different num_steps_choices "
-                f"({choices}); pass num_steps=... explicitly")
-        by_name["num_steps"] = next(iter(choices.values()))
-    return [(n, by_name[n]) for n in MODEL_AXES if n in by_name]
-
-
-def _bits_values(sub: SearchSpace) -> list[int]:
-    vals: set[int] = set()
-    for ax in sub.axes:
-        if ax.name != "weight_bits":
-            continue
-        for v in ax.values:
-            if ax.is_vector:
-                vals.update(int(x) for x in v)
-            else:
-                vals.add(int(v))
-    return sorted(vals)
-
-
-def _row_bits(cols: dict[str, np.ndarray]) -> Optional[np.ndarray]:
-    """Per-candidate effective weight precision: the global column, or the
-    per-layer minimum (the precision that bounds datapath accuracy)."""
-    wb = cols.get("weight_bits")
-    if wb is None:
-        return None
-    wb = np.asarray(wb)
-    return wb.min(axis=1) if wb.ndim == 2 else wb
-
-
-def _pad_layers(col: np.ndarray, width: int) -> np.ndarray:
-    """Pad a (n, L) per-layer column to (n, width) with -1 (absent layer)."""
-    if col.ndim != 2 or col.shape[1] == width:
-        return col
-    pad = np.full((len(col), width - col.shape[1]), -1, dtype=col.dtype)
-    return np.concatenate([col, pad], axis=1)
+    @property
+    def summary(self) -> dict:
+        """Auditable counters: cache hits/misses, remaining train budget,
+        cells resolved/skipped (see ``Study.summary``)."""
+        if self.study is not None:
+            return self.study.summary
+        return {"n_evaluated": self.n_evaluated,
+                "frontier_size": len(self.frontier),
+                "cells_resolved": len(self.cells),
+                "cache": dict(self.cache.stats)}
 
 
 def coexplore(workload: Union[str, Workload, None] = None,
-              space: Optional[SearchSpace] = None, *,
+              space=None, *,
               num_steps: Optional[Sequence[int]] = None,
               population: Optional[Sequence[float]] = None,
               datasets: Optional[Sequence[Union[str, Workload]]] = None,
@@ -166,7 +92,10 @@ def coexplore(workload: Union[str, Workload, None] = None,
               seed: int = 0,
               chunk_size: int = 65536,
               keep_all: bool = False,
-              lib: Optional[resources.CostLibrary] = None) -> CoExploreResult:
+              lib: Optional[resources.CostLibrary] = None,
+              strategy: Optional[Strategy] = None,
+              train_budget: Union[int, TrainingBudget, None] = None,
+              workers: int = 0) -> CoExploreResult:
     """Joint model x hardware search returning an accuracy-aware frontier.
 
     Model axes come from ``space`` (a ``SearchSpace`` with ``add_model``
@@ -183,148 +112,21 @@ def coexplore(workload: Union[str, Workload, None] = None,
 
     ``objectives`` may use any hardware metric plus ``error``
     (= 1 - accuracy, the minimization form of the accuracy objective).
+
+    ``strategy`` defaults to exhaustive cell enumeration (``GridSearch``);
+    pass ``RandomSearch``/``EvolutionarySearch`` (with a declared joint
+    space) plus ``train_budget=k`` for the NAS-style budgeted loop, and
+    ``workers=N`` to farm cell training across processes — all forwarded to
+    ``dse.explore``.
     """
-    for obj in objectives:
-        if obj == "accuracy":
-            raise ValueError("objectives are minimized — use 'error' "
-                             "(= 1 - accuracy) instead of 'accuracy'")
-        if obj not in CO_METRICS:
-            raise ValueError(f"unknown objective {obj!r}; pick from "
-                             f"{CO_METRICS}")
-    if workload is None and datasets is None and (
-            space is None or not any(ax.name == "dataset"
-                                     for ax in space.model_axes)):
-        raise ValueError("pass a workload, datasets=..., or a space with a "
-                         "'dataset' model axis")
-    custom_hw = hw_space is not None or (space is not None
-                                         and bool(space.hw_axes))
-    given_hw = [n for n, v in (("max_lhr", max_lhr),
-                               ("weight_bits", weight_bits)) if v is not None]
-    if custom_hw and given_hw:
-        raise ValueError(
-            f"the {given_hw} kwargs only shape the default hardware "
-            f"subspace, but one is already declared via "
-            f"{'hw_space' if hw_space is not None else 'the space'}; "
-            f"pick one declaration style")
-    cache = cache if cache is not None else TraceCache()
-
-    # Workload instances handed in directly (the ``workload`` param or
-    # ``datasets=`` entries) need not be in the global registry — cells
-    # carry only the name, so keep a local name -> Workload view.
-    local_wls: dict[str, Workload] = {}
-    if isinstance(workload, Workload):
-        local_wls[workload.name] = workload
-    for d in (datasets or ()):
-        if isinstance(d, Workload):
-            local_wls[d.name] = d
-    if space is not None:
-        for ax in space.model_axes:
-            if ax.name == "dataset":
-                for d in ax.values:
-                    if isinstance(d, Workload):
-                        local_wls[d.name] = d
-
-    def resolve_wl(w: Union[str, Workload]) -> Workload:
-        if isinstance(w, Workload):
-            return w
-        return local_wls[w] if w in local_wls else workloads.get(w)
-
-    model_axes = _model_axis_list(space, workload, num_steps, population,
-                                  datasets, resolve_wl)
-    base_wl = resolve_wl(workload) if workload is not None else None
-
-    def hw_factory(cfg: arch.AcceleratorConfig) -> SearchSpace:
-        if hw_space is not None:
-            return hw_space(cfg)
-        if space is not None and space.hw_axes:
-            return space.hardware_subspace(cfg)
-        sub = SearchSpace.product_lhr(
-            cfg, max_lhr=max_lhr if max_lhr is not None else 32)
-        if weight_bits is not None:
-            sub.add_global("weight_bits", tuple(int(b) for b in weight_bits))
-        return sub
-
-    # Prepass: materialize every cell's topology and hardware subspace
-    # BEFORE any training — a bad subspace (model axes, inconsistent column
-    # sets across cells) fails here rather than mid-sweep with cells already
-    # trained; also finds the widest per-layer column for cross-topology
-    # padding.
-    cells: list[tuple] = []
-    for cell in iter_cells(model_axes):
-        wl = resolve_wl(cell["dataset"]) if "dataset" in cell else base_wl
-        snn_cfg = wl.build(int(cell["num_steps"]),
-                           float(cell.get("population", 1.0)))
-        accel = arch.from_snn_config(snn_cfg)
-        sub = hw_factory(accel)
-        if sub.model_axes:
-            raise ValueError("hardware subspace must not contain model axes")
-        if not sub.axes:
-            raise ValueError(f"hardware subspace for cell {cell} has no "
-                             f"axes — nothing to sweep")
-        unknown = {ax.name for ax in sub.axes} - AXIS_NAMES
-        if unknown:
-            raise ValueError(f"hardware subspace for cell {cell} has axes "
-                             f"{sorted(unknown)} the evaluator does not "
-                             f"know; known: {sorted(AXIS_NAMES)}")
-        cells.append((cell, wl, snn_cfg, accel, sub))
-    if not cells:
-        raise ValueError("model subspace is empty (an axis has no values)")
-    names0 = sorted({ax.name for ax in cells[0][4].axes})
-    for cell, _, _, _, sub in cells[1:]:
-        names = sorted({ax.name for ax in sub.axes})
-        if names != names0:
-            raise ValueError(
-                f"hardware subspaces must share axis names across cells "
-                f"(one CandidateTable holds the joint frontier): cell "
-                f"{cells[0][0]} has {names0} but cell {cell} has {names}")
-    l_max = max(len(accel.layers) for _, _, _, accel, _ in cells)
-
-    acc = ParetoAccumulator(tuple(objectives))
-    kept: Optional[list[CandidateTable]] = [] if keep_all else None
-    records: list[CellRecord] = []
-    n_total = 0
-
-    for cell, wl, snn_cfg, accel, sub in cells:
-        bits = _bits_values(sub)
-        artifact = cache.resolve(wl, cell, seed=seed, quant_bits=bits)
-        counts = cycle_model.counts_from_traces(artifact.counts)
-
-        def evaluate(cols: dict[str, np.ndarray],
-                     _cell=cell, _accel=accel, _art=artifact,
-                     _counts=counts) -> dict[str, np.ndarray]:
-            metrics = evaluate_columns(_accel, _counts, cols, lib=lib)
-            n = len(next(iter(metrics.values())))
-            row_bits = _row_bits(cols)
-            if row_bits is None or not _art.quant_acc:
-                acc_col = np.full(n, _art.accuracy)
-            else:
-                uniq = np.unique(row_bits)
-                by_bits = np.array([_art.accuracy_at(int(b)) for b in uniq])
-                acc_col = by_bits[np.searchsorted(uniq, row_bits)]
-            out_cols = {k: (_pad_layers(v, l_max) if v.ndim == 2 else v)
-                        for k, v in cols.items()}
-            for name, _vals in model_axes:
-                v = _cell[name]
-                out_cols[name] = np.full(
-                    n, v, dtype=(np.int64 if name == "num_steps" else
-                                 np.float64 if name == "population" else None))
-            chunk = CandidateTable({**out_cols, **metrics,
-                                    "accuracy": acc_col,
-                                    "error": 1.0 - acc_col})
-            acc.update(chunk)
-            if kept is not None:
-                kept.append(chunk)
-            return metrics
-
-        n_cell = GridSearch(chunk_size).run(sub, evaluate, tuple(objectives))
-        n_total += n_cell
-        records.append(CellRecord(
-            workload=wl.name, assignment=dict(cell), key=artifact.key,
-            accuracy=artifact.accuracy, quant_acc=dict(artifact.quant_acc),
-            cache_hit=artifact.cache_hit, n_evaluated=n_cell,
-            layer_sizes=snn_cfg.layer_sizes()))
-
-    table = CandidateTable.concat(kept) if kept is not None else None
-    return CoExploreResult(objectives=tuple(objectives), frontier=acc.frontier,
-                           cells=records, n_evaluated=n_total, cache=cache,
-                           table=table)
+    study = explore(
+        space, workload=workload, datasets=datasets, num_steps=num_steps,
+        population=population, hw_space=hw_space, max_lhr=max_lhr,
+        weight_bits=weight_bits, objectives=objectives, cache=cache,
+        seed=seed, chunk_size=chunk_size, keep_all=keep_all, lib=lib,
+        strategy=strategy if strategy is not None else GridSearch(chunk_size),
+        train_budget=train_budget, workers=workers)
+    return CoExploreResult(objectives=study.objectives,
+                           frontier=study.frontier, cells=study.cells,
+                           n_evaluated=study.n_evaluated, cache=study.cache,
+                           table=study.table, study=study)

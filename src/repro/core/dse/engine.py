@@ -1,10 +1,13 @@
-"""Streaming search engine: strategy -> chunked evaluation -> Pareto merge.
+"""Hardware-only search: an exact thin wrapper over ``dse.explore``.
 
-``search`` never materializes the space: each chunk of candidates flows
-through the vectorised evaluator into the incremental Pareto accumulator,
-so a multi-million-point joint space runs in the memory of one chunk.  Pass
-``keep_all=True`` on small spaces to retain the full metric table (the
-legacy ``sweep`` behaviour).
+``search`` keeps its seed-era signature and numerics, but the loop now
+lives in ``dse.study``: the strategy is driven through the ask/tell
+contract and each asked chunk flows through the vectorised evaluator into
+the incremental Pareto accumulator — a ``GridSearch`` study reproduces the
+pre-ask/tell frontier bit-exactly (chunk boundaries and evaluation order
+are unchanged; tested).  For joint model x hardware searches, budgeted
+strategies, resumable studies, and worker farming, call ``dse.explore``
+directly.
 """
 from __future__ import annotations
 
@@ -15,52 +18,13 @@ import numpy as np
 
 from repro.core.accelerator import resources
 from repro.core.accelerator.arch import AcceleratorConfig
-from repro.core.dse.evaluate import METRICS, evaluate_columns
-from repro.core.dse.pareto import ParetoAccumulator
 from repro.core.dse.space import SearchSpace
-from repro.core.dse.strategies import GridSearch
+from repro.core.dse.study import (DEFAULT_OBJECTIVES, FrontierQueries,
+                                  explore)
 from repro.core.dse.table import CandidateTable
 
-DEFAULT_OBJECTIVES = ("cycles", "lut", "bram", "energy")
-
-
-class FrontierQueries:
-    """Query surface shared by every result that retains a Pareto frontier
-    (and optionally the full table): expects ``objectives``, ``frontier``
-    and ``table`` attributes on the subclass."""
-
-    objectives: tuple[str, ...]
-    frontier: CandidateTable
-    table: Optional[CandidateTable]
-
-    def _rows(self, needed: Sequence[str]) -> CandidateTable:
-        """Full table when kept; else the frontier — which is only a valid
-        search set when every queried column was a search objective (a
-        non-objective optimum may live off-frontier)."""
-        if self.table is not None:
-            return self.table
-        missing = [c for c in needed if c not in self.objectives]
-        if missing:
-            raise ValueError(
-                f"columns {missing} were not search objectives "
-                f"{self.objectives}; the retained frontier is only optimal "
-                f"over the objectives — re-search with them included, or "
-                f"with keep_all=True")
-        return self.frontier
-
-    def best_under(self, minimize: str, **caps: float) -> Optional[dict]:
-        """Row minimizing ``minimize`` among rows with col <= cap for every
-        kwarg — e.g. ``best_under("lut", cycles=20e3)``."""
-        t = self._rows((minimize, *caps))
-        if len(t) == 0:
-            return None
-        ok = np.ones(len(t), dtype=bool)
-        for col, cap in caps.items():
-            ok &= np.asarray(t.columns[col], np.float64) <= cap
-        if not ok.any():
-            return None
-        sub = t.take(ok)
-        return sub.row(sub.argmin(minimize))
+__all__ = ["DEFAULT_OBJECTIVES", "FrontierQueries", "SearchResult",
+           "auto_select", "search"]
 
 
 @dataclasses.dataclass
@@ -112,30 +76,12 @@ def search(cfg: AcceleratorConfig, counts: Sequence[np.ndarray],
             f"space has model axes "
             f"{[ax.name for ax in space.model_axes]}; those require "
             f"training/cache resolution per cell — use dse.coexplore")
-    for obj in objectives:
-        if obj not in METRICS:
-            raise ValueError(f"unknown objective {obj!r}; pick from {METRICS}")
-    if isinstance(strategy, str):
-        if strategy != "grid":
-            raise ValueError(f"unknown strategy name {strategy!r}; pass a "
-                             f"strategy instance for non-grid search")
-        strategy = GridSearch(chunk_size)
-
-    acc = ParetoAccumulator(objectives)
-    kept: Optional[list[CandidateTable]] = [] if keep_all else None
-
-    def evaluate(cols: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
-        metrics = evaluate_columns(cfg, counts, cols, lib=lib)
-        chunk = CandidateTable({**cols, **metrics})
-        acc.update(chunk)
-        if kept is not None:
-            kept.append(chunk)
-        return metrics
-
-    n = strategy.run(space, evaluate, tuple(objectives))
-    table = CandidateTable.concat(kept) if kept is not None else None
-    return SearchResult(config=cfg, space=space, objectives=tuple(objectives),
-                        frontier=acc.frontier, n_evaluated=n, table=table)
+    study = explore(space, config=cfg, counts=counts, strategy=strategy,
+                    objectives=objectives, chunk_size=chunk_size,
+                    keep_all=keep_all, lib=lib)
+    return SearchResult(config=cfg, space=space, objectives=study.objectives,
+                        frontier=study.frontier,
+                        n_evaluated=study.n_evaluated, table=study.table)
 
 
 def auto_select(cfg: AcceleratorConfig, counts: Sequence[np.ndarray],

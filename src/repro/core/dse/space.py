@@ -197,14 +197,19 @@ class SearchSpace:
             return
         yield from iter_cells([(ax.name, ax.values) for ax in axes])
 
-    def hardware_subspace(self, config: AcceleratorConfig | None = None
-                          ) -> "SearchSpace":
+    def hardware_subspace(self, config: AcceleratorConfig | None = None,
+                          dedup: bool = True) -> "SearchSpace":
         """The hardware-only axes, rebound to ``config`` (a model cell's
         derived ``AcceleratorConfig``).  ``lhr`` options (per-layer scalar
         or joint vector) are clamped to the cell's layer sizes (duplicates
         dropped, order kept) — a population-scaled cell may be narrower
         than the template the axes were declared against; joint axes whose
-        vector width disagrees with the cell's layer count are rejected."""
+        vector width disagrees with the cell's layer count are rejected.
+
+        ``dedup=False`` keeps clamp-induced duplicate values so every axis
+        retains its *template* cardinality — the property the joint ask/tell
+        driver needs: a strategy's digit over the template space then stays
+        a valid digit in every cell's rebound subspace."""
         config = config if config is not None else self.config
         sub = SearchSpace(config)
         for ax in self.hw_axes:
@@ -223,15 +228,52 @@ class SearchSpace:
                         f"hw_space callable to coexplore instead")
                 if ax.name == "lhr":
                     caps = [l.logical for l in config.layers]
-                    values = tuple(dict.fromkeys(
-                        tuple(min(int(x), c) for x, c in zip(v, caps))
-                        for v in values))
+                    clamped = (tuple(min(int(x), c) for x, c in zip(v, caps))
+                               for v in values)
+                    values = tuple(dict.fromkeys(clamped) if dedup
+                                   else clamped)
             elif ax.name == "lhr" and ax.layer is not None:
                 cap = config.layers[ax.layer].logical
-                values = tuple(dict.fromkeys(
-                    min(int(v), cap) for v in ax.values))
+                clamped = (min(int(v), cap) for v in ax.values)
+                values = tuple(dict.fromkeys(clamped) if dedup else clamped)
             sub._append(Axis(ax.name, values, layer=ax.layer))
         return sub
+
+    def split_digits(self, digits: np.ndarray
+                     ) -> tuple[np.ndarray, np.ndarray]:
+        """Split an (n, n_axes) digit matrix into its model-axis and
+        hardware-axis columns (each in declared-axis order) — the joint
+        ask/tell driver factors asked chunks by model cell this way."""
+        digits = np.asarray(digits)
+        model = [i for i, ax in enumerate(self.axes) if ax.name in MODEL_AXES]
+        hw = [i for i, ax in enumerate(self.axes) if ax.name not in MODEL_AXES]
+        return digits[:, model], digits[:, hw]
+
+    def model_assignment(self, model_digits: Sequence[int]) -> dict:
+        """One model-axis digit row -> assignment dict (``dataset`` values
+        stay whatever was declared — name or Workload instance)."""
+        axes = self.model_axes
+        if len(model_digits) != len(axes):
+            raise ValueError(f"{len(model_digits)} model digits for "
+                             f"{len(axes)} model axes")
+        return {ax.name: ax.values[int(d)]
+                for ax, d in zip(axes, model_digits)}
+
+    def signature(self) -> list:
+        """Canonical structural description (axis names, bindings, values)
+        used to verify a resumed ``Study`` is given the space it was
+        checkpointed with.  Values reduce to primitives; objects (e.g.
+        Workload instances on a ``dataset`` axis) reduce to their ``name``
+        or ``repr``."""
+        def prim(v):
+            if isinstance(v, (tuple, list, np.ndarray)):
+                return [prim(x) for x in v]
+            if isinstance(v, (int, float, str, bool)):
+                return v
+            if isinstance(v, np.generic):
+                return v.item()
+            return getattr(v, "name", repr(v))
+        return [[ax.name, ax.layer, prim(ax.values)] for ax in self.axes]
 
     # ---- decoding ---------------------------------------------------------
     def digits(self, flat_idx: np.ndarray) -> np.ndarray:

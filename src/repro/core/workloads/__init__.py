@@ -7,12 +7,14 @@ population-scale knob, an encoding, and candidate spike-train lengths; the
 seed)`` cell deterministically and content-addressed, so repeated sweeps
 never retrain and cells can be farmed out across processes.
 """
-from repro.core.workloads.cache import (CellArtifact, TraceCache, cell_key,
+from repro.core.workloads.cache import (BudgetExceeded, CellArtifact,
+                                        TraceCache, TrainingBudget, cell_key,
                                         default_root)
 from repro.core.workloads.registry import (DATASET_FAMILIES, Workload, get,
                                            names, register)
 
 __all__ = [
-    "CellArtifact", "DATASET_FAMILIES", "TraceCache", "Workload", "cell_key",
-    "default_root", "get", "names", "register",
+    "BudgetExceeded", "CellArtifact", "DATASET_FAMILIES", "TraceCache",
+    "TrainingBudget", "Workload", "cell_key", "default_root", "get", "names",
+    "register",
 ]

@@ -54,6 +54,47 @@ def default_root() -> str:
         os.path.join(os.path.expanduser("~"), ".cache", "repro", "workloads"))
 
 
+class BudgetExceeded(RuntimeError):
+    """A cache miss would overspend the training budget."""
+
+
+class TrainingBudget:
+    """Training budget denominated in cache *misses* — the expensive leg of
+    co-exploration.  Cache hits are free; each miss (an actual training run)
+    charges one unit.  ``TraceCache.resolve(..., budget=...)`` charges
+    *before* training starts, so an exhausted budget fails fast instead of
+    after minutes of wasted work.  NAS-style drivers (``dse.explore``) probe
+    ``can_spend`` + ``TraceCache.contains`` to *skip* unaffordable cells
+    gracefully rather than raise."""
+
+    def __init__(self, limit: int):
+        if limit < 0:
+            raise ValueError(f"budget limit must be >= 0, got {limit}")
+        self.limit = int(limit)
+        self.spent = 0
+
+    @property
+    def remaining(self) -> int:
+        return self.limit - self.spent
+
+    def can_spend(self, n: int = 1) -> bool:
+        return self.spent + n <= self.limit
+
+    def charge(self, n: int = 1) -> None:
+        if not self.can_spend(n):
+            raise BudgetExceeded(
+                f"training budget exhausted: {self.spent}/{self.limit} "
+                f"misses spent, cannot charge {n} more")
+        self.spent += n
+
+    def state_dict(self) -> dict:
+        return {"limit": self.limit, "spent": self.spent}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.limit = int(state["limit"])
+        self.spent = int(state["spent"])
+
+
 def cell_key(workload: Workload, assignment: dict, seed: int) -> str:
     """Content hash of everything that determines the trained artifact."""
     payload = {
@@ -93,13 +134,26 @@ class TraceCache:
         self.misses = 0
 
     # ---- public -----------------------------------------------------------
+    def contains(self, workload: Workload, assignment: dict,
+                 seed: int = 0) -> bool:
+        """True when the cell is already published (resolving it is a hit —
+        no training, no budget charge).  Does not touch the counters."""
+        norm = {"num_steps": int(assignment["num_steps"]),
+                "population": float(assignment.get("population", 1.0))}
+        key = cell_key(workload, norm, seed)
+        return self._read_meta(os.path.join(self.root, key)) is not None
+
     def resolve(self, workload: Workload, assignment: dict, seed: int = 0,
-                quant_bits: Sequence[int] = ()) -> CellArtifact:
+                quant_bits: Sequence[int] = (),
+                budget: Optional[TrainingBudget] = None) -> CellArtifact:
         """Train-or-load one cell.  ``assignment`` must provide ``num_steps``
         and may provide ``population`` (default 1.0).  ``quant_bits``: weight
         precisions whose fixed-point accuracy the caller needs (rate-encoded
         MLPs only — the datapath ``validate`` models; silently skipped
-        otherwise) — computed once and appended to the cell's metadata."""
+        otherwise) — computed once and appended to the cell's metadata.
+        ``budget``: a ``TrainingBudget`` charged one miss *before* training
+        starts; an exhausted budget raises ``BudgetExceeded`` instead of
+        training (hits are always free)."""
         T = int(assignment["num_steps"])
         pop = float(assignment.get("population", 1.0))
         norm = {"num_steps": T, "population": pop}
@@ -113,6 +167,8 @@ class TraceCache:
             self.hits += 1
             hit = True
         else:
+            if budget is not None:
+                budget.charge()
             params, counts, accuracy = self._train(workload, cfg, T, seed)
             meta = {"workload": workload.name, "assignment": norm,
                     "seed": int(seed), "accuracy": float(accuracy),

@@ -1,0 +1,71 @@
+"""Parallel model-cell training: shard pending cells across processes.
+
+The co-exploration trace cache (``repro.core.workloads.cache``) is
+content-addressed and publishes atomically, so concurrent trainers of the
+same cell race benignly and trainers of *different* cells never interact —
+which makes farming the cell list across worker processes safe without any
+coordination beyond a shared cache root.  This module is that driver: give
+it the pending ``(workload, assignment)`` jobs and a cache root, and it
+round-robins them over ``workers`` spawned processes; afterwards every
+farmed cell resolves as a cache hit in the parent.
+
+Workers are spawned (not forked): JAX is not fork-safe once initialized,
+and each worker re-imports the stack and trains on CPU independently.  For
+one or zero pending jobs the farm degrades to in-process resolution — no
+spawn cost for the common all-hits re-run.
+
+``Study``/``dse.explore(..., workers=N)`` and ``dse.coexplore(...,
+workers=N)`` are the front ends (ROADMAP "parallel cell farming").
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing
+from typing import Optional, Sequence
+
+from repro.core.workloads.cache import TraceCache
+from repro.core.workloads.registry import Workload
+
+
+@dataclasses.dataclass(frozen=True)
+class CellJob:
+    """One cell to train-or-load: everything a worker needs, picklable."""
+    workload: Workload
+    assignment: dict               # {"num_steps": T, "population": p}
+    seed: int = 0
+    quant_bits: tuple[int, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class CellOutcome:
+    key: str                       # content address in the shared cache
+    trained: bool                  # True = this worker trained it (a miss)
+
+
+def _resolve_job(args: tuple[CellJob, str]) -> CellOutcome:
+    """Worker entry point: resolve one cell against the shared cache root.
+    Module-level so the spawn pickler can import it by reference."""
+    job, root = args
+    cache = TraceCache(root=root)
+    art = cache.resolve(job.workload, job.assignment, seed=job.seed,
+                        quant_bits=job.quant_bits)
+    return CellOutcome(key=art.key, trained=not art.cache_hit)
+
+
+def resolve_cells(jobs: Sequence[CellJob], root: str,
+                  workers: Optional[int] = None) -> list[CellOutcome]:
+    """Resolve ``jobs`` into the cache at ``root``, training missing cells
+    across up to ``workers`` processes (default: one per job, capped at the
+    CPU count).  Returns one outcome per job, in job order.  The parent's
+    own ``TraceCache`` counters are untouched — count ``trained`` outcomes
+    for miss accounting."""
+    args = [(job, root) for job in jobs]
+    if not args:
+        return []
+    workers = min(workers if workers is not None else len(args),
+                  len(args), multiprocessing.cpu_count())
+    if workers <= 1 or len(args) == 1:
+        return [_resolve_job(a) for a in args]
+    ctx = multiprocessing.get_context("spawn")   # JAX is not fork-safe
+    with ctx.Pool(processes=workers) as pool:
+        return pool.map(_resolve_job, args)

@@ -1,0 +1,69 @@
+"""Tests for tools/bench_diff.py: regression flagging direction, threshold,
+duplicate-name pairing, strict exit code, and --json output."""
+import json
+import os
+import subprocess
+import sys
+
+TOOL = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "tools", "bench_diff.py")
+
+
+def _write(path, records):
+    with open(path, "w") as f:
+        for r in records:
+            f.write(json.dumps(r) + "\n")
+
+
+def _run(*args):
+    return subprocess.run([sys.executable, TOOL, *args],
+                          capture_output=True, text=True)
+
+
+def test_flags_throughput_drop_and_latency_growth(tmp_path):
+    old = tmp_path / "old.json"
+    new = tmp_path / "new.json"
+    _write(old, [{"name": "a", "cands_per_sec": 1000, "seconds": 1.0},
+                 {"name": "b", "cands_per_sec": 1000, "seconds": 1.0}])
+    _write(new, [{"name": "a", "cands_per_sec": 500, "seconds": 2.0},
+                 {"name": "b", "cands_per_sec": 990, "seconds": 1.05}])
+    out = _run(str(old), str(new), "--json")
+    assert out.returncode == 0                    # report-only by default
+    d = json.loads(out.stdout)
+    flagged = {(r["name"], r["field"]) for r in d["regressions"]}
+    assert flagged == {("a", "cands_per_sec"), ("a", "seconds")}
+    # strict mode exits nonzero on regression
+    assert _run(str(old), str(new), "--strict").returncode == 1
+
+
+def test_improvements_and_info_fields_not_flagged(tmp_path):
+    old = tmp_path / "old.json"
+    new = tmp_path / "new.json"
+    _write(old, [{"name": "a", "cands_per_sec": 1000, "seconds": 2.0,
+                  "frontier": 10}])
+    _write(new, [{"name": "a", "cands_per_sec": 2000, "seconds": 1.0,
+                  "frontier": 99}])
+    d = json.loads(_run(str(old), str(new), "--json").stdout)
+    assert d["n_regressions"] == 0
+    # frontier changed but it's informational, not a perf direction
+    info = [c for c in d["changes"] if c["field"] == "frontier"]
+    assert info and info[0]["direction"] == "info"
+    assert _run(str(old), str(new), "--strict").returncode == 0
+
+
+def test_threshold_and_duplicate_names(tmp_path):
+    old = tmp_path / "old.json"
+    new = tmp_path / "new.json"
+    # duplicated names pair up in order; count mismatch is skipped w/ a note
+    _write(old, [{"name": "cell", "seconds": 1.0},
+                 {"name": "cell", "seconds": 1.0},
+                 {"name": "odd", "seconds": 1.0},
+                 {"name": "odd", "seconds": 1.0}])
+    _write(new, [{"name": "cell", "seconds": 1.1},
+                 {"name": "cell", "seconds": 3.0},
+                 {"name": "odd", "seconds": 9.0}])
+    d = json.loads(_run(str(old), str(new), "--json",
+                        "--threshold", "0.5").stdout)
+    regs = [(r["name"], r["index"]) for r in d["regressions"]]
+    assert regs == [("cell", 1)]                  # 10% < 50% threshold
+    assert any("odd" in n for n in d["notes"])

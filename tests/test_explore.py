@@ -1,0 +1,468 @@
+"""Tests for the unified ask/tell exploration driver: the strategy contract
+(argument validation, in-chunk dedup, determinism, state round-trips),
+hardware-mode bit-exact equivalence with ``search``, budgeted joint
+strategies over the full model x hardware digit space, ``Study``
+checkpoint/resume, and worker cell farming."""
+import dataclasses
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import dse, snn, workloads
+from repro.core.accelerator import arch
+
+
+def _tiny_wl(name="explore-test-wl"):
+    return dataclasses.replace(
+        workloads.get("mnist-mlp"), name=name,
+        layers=(snn.Dense(12),), pcr=1,
+        n_train=128, n_test=64, train_steps=4, trace_samples=16)
+
+
+def _hw_setup(max_lhr=8):
+    cfg = arch.from_layer_sizes("t", (64, 32, 16), num_steps=3)
+    counts = [np.full(3, 8.0)] * 2
+    space = dse.SearchSpace.product_lhr(cfg, max_lhr=max_lhr)
+    return cfg, counts, space
+
+
+def _joint_space(wl, lhr=(1, 2, 4), bits=(4, 8), T=(2, 3),
+                 pops=(0.5, 1.0)):
+    tmpl = arch.from_snn_config(wl.build(int(T[0]), 1.0))
+    return (dse.SearchSpace(tmpl)
+            .add_model("num_steps", T)
+            .add_model("population", pops)
+            .add_per_layer("lhr", [list(lhr) for _ in tmpl.layers])
+            .add_global("weight_bits", bits))
+
+
+def _rows(table):
+    """All columns flattened to sortable float rows (strings via crc32)."""
+    cols = []
+    for k in sorted(table.columns):
+        v = np.asarray(table.columns[k])
+        if v.dtype.kind in "USO":
+            v = np.array([float(zlib.crc32(str(x).encode())) for x in v])
+        cols.append(np.asarray(v, np.float64).reshape(len(table), -1))
+    a = np.concatenate(cols, axis=1)
+    return a[np.lexsort(a.T)]
+
+
+@pytest.fixture(scope="module")
+def shared_cache(tmp_path_factory):
+    """One cache for the whole module so each cell trains exactly once."""
+    return workloads.TraceCache(root=str(tmp_path_factory.mktemp("cells")))
+
+
+class TestStrategyContract:
+    def test_random_search_argument_validation(self):
+        with pytest.raises(ValueError, match="n_samples"):
+            dse.RandomSearch(0)
+        with pytest.raises(ValueError, match="n_samples"):
+            dse.RandomSearch(-5)
+        with pytest.raises(ValueError, match="chunk_size"):
+            dse.RandomSearch(10, chunk_size=0)
+        with pytest.raises(ValueError, match="chunk_size"):
+            dse.GridSearch(chunk_size=0)
+        with pytest.raises(ValueError, match="generations"):
+            dse.EvolutionarySearch(population=8, generations=0)
+
+    def test_random_search_dedups_within_chunk(self):
+        _, _, space = _hw_setup(max_lhr=2)          # 2 x 2 = 4 candidates
+        s = dse.RandomSearch(50, seed=0, chunk_size=50)
+        s.bind(space, ("cycles",))
+        total = 0
+        while True:
+            digits = s.ask(50)
+            if len(digits) == 0:
+                break
+            # every asked chunk is duplicate-free ...
+            assert len(np.unique(digits, axis=0)) == len(digits)
+            total += len(digits)
+            s.tell(digits, np.zeros((len(digits), 1)))
+        # ... and the distinct rows still add up to n_samples
+        assert total == 50
+
+    def test_grid_state_roundtrip_continues_exactly(self):
+        _, _, space = _hw_setup()
+        a = dse.GridSearch(chunk_size=7)
+        a.bind(space, ("cycles",))
+        first = a.ask(7)
+        state = a.state_dict()
+        b = dse.GridSearch(chunk_size=7)
+        b.bind(space, ("cycles",))
+        b.load_state_dict(state)
+        np.testing.assert_array_equal(
+            np.concatenate([first, b.ask(7)]),
+            space.digits(np.arange(14)))
+
+    def test_random_state_roundtrip_continues_exactly(self):
+        _, _, space = _hw_setup()
+        a = dse.RandomSearch(40, seed=9, chunk_size=10)
+        a.bind(space, ("cycles",))
+        seen_a = [a.ask(10) for _ in range(2)]
+        state = a.state_dict()
+        rest_a = []
+        while len(chunk := a.ask(10)):
+            rest_a.append(chunk)
+        b = dse.RandomSearch(40, seed=9, chunk_size=10)
+        b.bind(space, ("cycles",))
+        b.load_state_dict(state)
+        rest_b = []
+        while len(chunk := b.ask(10)):
+            rest_b.append(chunk)
+        np.testing.assert_array_equal(np.concatenate(rest_a),
+                                      np.concatenate(rest_b))
+        assert all(len(c) for c in seen_a)
+
+
+class TestHardwareExplore:
+    def test_grid_explore_matches_search_bit_exactly(self):
+        cfg, counts, space = _hw_setup()
+        study = dse.explore(space, counts=counts, chunk_size=13)
+        ref = dse.search(cfg, counts, space, chunk_size=13)
+        assert study.mode == "hardware" and study.done
+        assert study.n_evaluated == ref.n_evaluated == space.size
+        np.testing.assert_array_equal(_rows(study.frontier),
+                                      _rows(ref.frontier))
+        # bit-exact, not just close
+        for k in study.frontier.columns:
+            assert study.frontier.columns[k].dtype == \
+                ref.frontier.columns[k].dtype
+
+    @pytest.mark.parametrize("make", [
+        lambda seed: dse.RandomSearch(120, seed=seed),
+        lambda seed: dse.EvolutionarySearch(population=16, generations=5,
+                                            seed=seed)])
+    def test_strategy_determinism_same_seed_same_frontier(self, make):
+        cfg, counts, space = _hw_setup()
+        a = dse.explore(space, counts=counts, strategy=make(3))
+        b = dse.explore(space, counts=counts, strategy=make(3))
+        assert a.n_evaluated == b.n_evaluated > 0
+        np.testing.assert_array_equal(_rows(a.frontier), _rows(b.frontier))
+
+    def test_chunking_does_not_change_strategy_results(self):
+        """The driver owns chunking: splitting a population across many
+        ask/tell rounds must not change the evolutionary trajectory."""
+        cfg, counts, space = _hw_setup()
+        make = lambda: dse.EvolutionarySearch(population=16, generations=4,
+                                              seed=7)
+        a = dse.explore(space, counts=counts, strategy=make(), chunk_size=5)
+        b = dse.explore(space, counts=counts, strategy=make(),
+                        chunk_size=4096)
+        assert a.n_evaluated == b.n_evaluated == 16 * 4
+        np.testing.assert_array_equal(_rows(a.frontier), _rows(b.frontier))
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_evolutionary_beats_random_on_best_point(self, seed):
+        """Sanity: with an equal evaluation budget on a space too large to
+        enumerate cheaply, the evolutionary loop finds a better best
+        trade-off point (min normalized objective sum) than i.i.d.
+        sampling.  Deterministic for the pinned seeds."""
+        cfg = arch.from_layer_sizes(
+            "q", (512, 256, 256, 128, 128, 64, 64), num_steps=3)
+        counts = [np.full(3, 12.0)] * 6
+        space = dse.SearchSpace.product_lhr(cfg, max_lhr=256)
+        objectives = ("cycles", "lut")
+
+        def best_sum(study, lo, hi):
+            f = np.stack([np.asarray(study.frontier.columns[k], np.float64)
+                          for k in objectives], axis=1)
+            return ((f - lo) / (hi - lo)).sum(axis=1).min()
+
+        evo = dse.explore(space, counts=counts, objectives=objectives,
+                          strategy=dse.EvolutionarySearch(
+                              population=32, generations=12, seed=seed))
+        rnd = dse.explore(space, counts=counts, objectives=objectives,
+                          strategy=dse.RandomSearch(32 * 12, seed=seed))
+        assert evo.n_evaluated == rnd.n_evaluated == 32 * 12
+        all_pts = np.concatenate([
+            np.stack([np.asarray(s.frontier.columns[k], np.float64)
+                      for k in objectives], axis=1) for s in (evo, rnd)])
+        lo, hi = all_pts.min(axis=0), all_pts.max(axis=0)
+        assert best_sum(evo, lo, hi) < best_sum(rnd, lo, hi)
+
+    def test_explore_validates_like_search(self):
+        cfg, counts, space = _hw_setup()
+        with pytest.raises(ValueError, match="unknown objective"):
+            dse.explore(space, counts=counts, objectives=("latency",))
+        with pytest.raises(ValueError, match="unknown strategy name"):
+            dse.explore(space, counts=counts, strategy="annealing")
+        with pytest.raises(ValueError, match="counts"):
+            dse.explore(space)
+        with pytest.raises(ValueError, match="chunk_size"):
+            dse.explore(space, counts=counts, chunk_size=0)
+        # joint-only kwargs on a hardware-only space fail loudly instead of
+        # being silently ignored
+        with pytest.raises(ValueError, match="hardware-only"):
+            dse.explore(space, counts=counts, workers=4)
+        with pytest.raises(ValueError, match="hardware-only"):
+            dse.explore(space, counts=counts, train_budget=3)
+        with pytest.raises(ValueError, match="hardware-only"):
+            dse.explore(space, counts=counts, max_lhr=8)
+
+
+class TestJointBudgetedExplore:
+    def test_evolutionary_joint_respects_train_budget(self, tmp_path):
+        """The acceptance sweep: EvolutionarySearch over the full
+        (num_steps x population x LHR x weight_bits) digit space with
+        train_budget=2 trains at most 2 of the 4 cells — verified by the
+        cache counters — and the frontier only contains trained cells."""
+        wl = _tiny_wl()
+        space = _joint_space(wl)
+        cache = workloads.TraceCache(root=str(tmp_path / "cells"))
+        study = dse.explore(
+            space, workload=wl, cache=cache, train_budget=2, chunk_size=8,
+            strategy=dse.EvolutionarySearch(population=8, generations=3,
+                                            seed=0))
+        assert study.mode == "joint" and study.done
+        assert cache.misses <= 2
+        assert study.summary["train_budget"]["spent"] == cache.misses
+        assert study.summary["cache"]["misses"] == cache.misses
+        assert len(study.cells) <= 2
+        assert study.n_evaluated > 0
+        fr = study.frontier
+        trained = {(c.assignment["num_steps"], c.assignment["population"])
+                   for c in study.cells}
+        for i in range(len(fr)):
+            r = fr.row(i)
+            assert (r["num_steps"], r["population"]) in trained
+        # frontier is mutually non-dominated and accuracy-aware
+        obj = np.stack([np.asarray(fr.columns[k]) for k in study.objectives],
+                       axis=1)
+        assert dse.pareto_mask_k(obj).all()
+        cells = {(c.assignment["num_steps"], c.assignment["population"]): c
+                 for c in study.cells}
+        for i in range(len(fr)):
+            r = fr.row(i)
+            c = cells[(r["num_steps"], r["population"])]
+            assert r["accuracy"] == c.quant_acc[r["weight_bits"]]
+        # once the budget is gone, encountered untrained cells are skipped
+        if study.summary["train_budget"]["remaining"] == 0:
+            assert study.summary["cells_skipped"] == len(study.skipped)
+
+    def test_budget_zero_skips_everything(self, tmp_path):
+        wl = _tiny_wl()
+        cache = workloads.TraceCache(root=str(tmp_path / "cells"))
+        study = dse.explore(
+            _joint_space(wl), workload=wl, cache=cache, train_budget=0,
+            strategy=dse.RandomSearch(32, seed=0))
+        assert cache.misses == 0 and cache.hits == 0
+        assert study.n_evaluated == 0
+        assert len(study.frontier) == 0
+        assert len(study.skipped) > 0
+
+    def test_cache_hits_are_free_under_budget(self, shared_cache):
+        """Cells already in the cache cost nothing: a zero budget still
+        explores them (NAS semantics: the budget is *training* cost)."""
+        wl = _tiny_wl()
+        space = _joint_space(wl)
+        warm = dse.explore(space, workload=wl, cache=shared_cache,
+                           strategy=dse.RandomSearch(64, seed=1))
+        assert len(warm.cells) == 4
+        misses_before = shared_cache.misses
+        study = dse.explore(space, workload=wl, cache=shared_cache,
+                            train_budget=0,
+                            strategy=dse.RandomSearch(64, seed=1))
+        assert shared_cache.misses == misses_before
+        assert len(study.cells) == 4 and not study.skipped
+        assert study.n_evaluated == warm.n_evaluated
+        np.testing.assert_array_equal(_rows(study.frontier),
+                                      _rows(warm.frontier))
+
+    def test_joint_strategies_need_declared_space(self, shared_cache):
+        wl = _tiny_wl()
+        with pytest.raises(ValueError, match="joint digit space"):
+            dse.explore(workload=wl, num_steps=(2, 3), max_lhr=4,
+                        cache=shared_cache,
+                        strategy=dse.RandomSearch(16))
+        space = _joint_space(wl)
+        with pytest.raises(ValueError, match="joint digit space"):
+            dse.explore(space, workload=wl, cache=shared_cache,
+                        hw_space=lambda c: dse.SearchSpace.product_lhr(c),
+                        strategy=dse.RandomSearch(16))
+        tmpl = arch.from_snn_config(wl.build(2, 1.0))
+        no_t = (dse.SearchSpace(tmpl)
+                .add_model("population", (0.5, 1.0))
+                .add_per_layer("lhr", [[1, 2] for _ in tmpl.layers]))
+        with pytest.raises(ValueError, match="num_steps"):
+            dse.explore(no_t, workload=wl, cache=shared_cache,
+                        strategy=dse.RandomSearch(16))
+
+    def test_coexplore_strategy_passthrough_matches_explore(self,
+                                                            shared_cache):
+        """coexplore(strategy=..., train_budget=...) is a thin wrapper over
+        the same joint driver."""
+        wl = _tiny_wl()
+        space = _joint_space(wl)
+        res = dse.coexplore(wl, space, cache=shared_cache,
+                            strategy=dse.RandomSearch(64, seed=1))
+        study = dse.explore(space, workload=wl, cache=shared_cache,
+                            strategy=dse.RandomSearch(64, seed=1))
+        assert res.n_evaluated == study.n_evaluated
+        np.testing.assert_array_equal(_rows(res.frontier),
+                                      _rows(study.frontier))
+        assert res.summary["cache"]["hits"] >= 4
+
+
+class TestStudyLifecycle:
+    def test_hardware_checkpoint_resume_identical(self, tmp_path):
+        cfg, counts, space = _hw_setup()
+        ref = dse.explore(space, counts=counts, chunk_size=3)
+
+        ck = str(tmp_path / "study")
+        study = dse.explore(space, counts=counts, chunk_size=3,
+                            checkpoint_dir=ck, run=False)
+        for _ in range(3):
+            assert study.step()
+        study.checkpoint()
+        resumed = dse.explore(space, counts=counts, chunk_size=3,
+                              checkpoint_dir=ck, resume=True)
+        assert resumed.done
+        assert resumed.n_evaluated == ref.n_evaluated
+        np.testing.assert_array_equal(_rows(resumed.frontier),
+                                      _rows(ref.frontier))
+        # dtypes survive the store round-trip exactly (int64/float64)
+        for k, v in ref.frontier.columns.items():
+            assert resumed.frontier.columns[k].dtype == v.dtype
+        # the resumed run's final checkpoint (new step dir, old one pruned)
+        # is itself resumable
+        again = dse.explore(space, counts=counts, chunk_size=3,
+                            checkpoint_dir=ck, resume=True)
+        assert again.done and again.n_evaluated == ref.n_evaluated
+
+    def test_cells_mode_checkpoint_resume(self, tmp_path):
+        """Cells-mode studies checkpoint at cell boundaries: the outer
+        strategy holds no state (each cell sweeps its own inner grid), only
+        the cell cursor + records resume."""
+        wl = _tiny_wl("explore-cells-ck")
+        ref_cache = workloads.TraceCache(root=str(tmp_path / "ref"))
+        ref = dse.explore(workload=wl, num_steps=(2, 3), max_lhr=4,
+                          cache=ref_cache)
+        assert ref.mode == "cells"
+
+        root = str(tmp_path / "cells")
+        ck = str(tmp_path / "ck")
+        mid_cache = workloads.TraceCache(root=root)
+        study = dse.explore(workload=wl, num_steps=(2, 3), max_lhr=4,
+                            cache=mid_cache, checkpoint_dir=ck, run=False)
+        assert study.step()                       # first cell swept
+        study.checkpoint()
+        assert mid_cache.misses == 1
+
+        fresh = workloads.TraceCache(root=root)
+        resumed = dse.explore(workload=wl, num_steps=(2, 3), max_lhr=4,
+                              cache=fresh, checkpoint_dir=ck, resume=True)
+        assert resumed.done
+        assert fresh.misses == 1                  # only the 2nd cell trains
+        assert resumed.n_evaluated == ref.n_evaluated
+        assert [c.workload for c in resumed.cells] == \
+            [c.workload for c in ref.cells]
+        np.testing.assert_array_equal(_rows(resumed.frontier),
+                                      _rows(ref.frontier))
+
+    def test_joint_checkpoint_resume_no_retraining(self, tmp_path):
+        """The acceptance flow: a budgeted evolutionary joint study is
+        checkpointed mid-run and resumed — the resumed study retrains
+        nothing (all cache hits) and finishes with the exact frontier of an
+        uninterrupted run."""
+        wl = _tiny_wl()
+        space = _joint_space(wl)
+        make = lambda: dse.EvolutionarySearch(population=8, generations=4,
+                                              seed=1)
+
+        # reference: uninterrupted run on its own fresh cache root
+        ref_cache = workloads.TraceCache(root=str(tmp_path / "cells_ref"))
+        ref = dse.explore(space, workload=wl, cache=ref_cache,
+                          train_budget=2, chunk_size=8, strategy=make())
+        assert ref_cache.misses <= 2
+
+        # identically configured study on a second fresh root, interrupted
+        # after 3 rounds (by then the 2-miss budget is spent)
+        root = str(tmp_path / "cells_mid")
+        ck = str(tmp_path / "study")
+        mid_cache = workloads.TraceCache(root=root)
+        study = dse.explore(space, workload=wl, cache=mid_cache,
+                            train_budget=2, chunk_size=8, strategy=make(),
+                            checkpoint_dir=ck, run=False)
+        for _ in range(3):
+            assert study.step()
+        study.checkpoint()
+        assert not study.done
+        assert mid_cache.misses == 2              # budget spent pre-resume
+
+        fresh_cache = workloads.TraceCache(root=root)
+        resumed = dse.explore(space, workload=wl, cache=fresh_cache,
+                              train_budget=2, chunk_size=8, strategy=make(),
+                              checkpoint_dir=ck, resume=True)
+        assert resumed.done
+        assert fresh_cache.misses == 0            # no re-training
+        assert resumed.n_evaluated == ref.n_evaluated
+        assert resumed.summary["train_budget"] == \
+            ref.summary["train_budget"]
+        np.testing.assert_array_equal(_rows(resumed.frontier),
+                                      _rows(ref.frontier))
+        assert sorted(c.key for c in resumed.cells) == \
+            sorted(c.key for c in ref.cells)
+
+    def test_resume_refuses_different_study(self, tmp_path):
+        cfg, counts, space = _hw_setup()
+        ck = str(tmp_path / "study")
+        dse.explore(space, counts=counts, checkpoint_dir=ck)
+        with pytest.raises(ValueError, match="different study"):
+            dse.explore(space, counts=counts, objectives=("cycles", "lut"),
+                        checkpoint_dir=ck, resume=True)
+        with pytest.raises(FileNotFoundError, match="checkpoint"):
+            dse.explore(space, counts=counts,
+                        checkpoint_dir=str(tmp_path / "nope"), resume=True)
+        # same strategy CLASS with different hyperparameters also refuses
+        ck2 = str(tmp_path / "study2")
+        dse.explore(space, counts=counts,
+                    strategy=dse.RandomSearch(50, seed=1),
+                    checkpoint_dir=ck2)
+        with pytest.raises(ValueError, match="different study"):
+            dse.explore(space, counts=counts,
+                        strategy=dse.RandomSearch(60, seed=1),
+                        checkpoint_dir=ck2, resume=True)
+
+    def test_checkpoint_keep_all_conflict(self, tmp_path):
+        cfg, counts, space = _hw_setup()
+        with pytest.raises(ValueError, match="keep_all"):
+            dse.explore(space, counts=counts, keep_all=True,
+                        checkpoint_dir=str(tmp_path / "s"))
+        with pytest.raises(ValueError, match="checkpoint_dir"):
+            dse.explore(space, counts=counts, resume=True)
+
+    def test_summary_counters(self, shared_cache):
+        wl = _tiny_wl()
+        res = dse.coexplore(wl, num_steps=(2, 3), population=(0.5, 1.0),
+                            max_lhr=4, weight_bits=(4, 8),
+                            cache=shared_cache)
+        s = res.summary
+        assert s["mode"] == "cells" and s["done"]
+        assert s["n_evaluated"] == res.n_evaluated
+        assert s["cells_resolved"] == 4
+        assert set(s["cache"]) == {"hits", "misses", "farmed_misses"}
+        assert s["train_budget"] is None
+
+
+class TestCellFarming:
+    def test_coexplore_workers_matches_serial(self, tmp_path):
+        """workers=N trains pending cells across processes into the shared
+        content-addressed cache; the driver then resolves them as hits and
+        the result equals the serial sweep."""
+        wl = _tiny_wl("explore-farm-wl")
+        serial_cache = workloads.TraceCache(root=str(tmp_path / "a"))
+        serial = dse.coexplore(wl, num_steps=(2, 3), max_lhr=4,
+                               cache=serial_cache)
+
+        farm_cache = workloads.TraceCache(root=str(tmp_path / "b"))
+        farmed = dse.coexplore(wl, num_steps=(2, 3), max_lhr=4,
+                               cache=farm_cache, workers=2)
+        assert farmed.study.farmed_misses == 2
+        assert farm_cache.misses == 0             # parent only saw hits
+        assert farm_cache.hits == 2
+        assert farmed.summary["cache"]["farmed_misses"] == 2
+        np.testing.assert_array_equal(_rows(farmed.frontier),
+                                      _rows(serial.frontier))

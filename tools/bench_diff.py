@@ -1,0 +1,144 @@
+"""Diff two BENCH_*.json line files and flag performance regressions.
+
+CI uploads one JSON-lines artifact per run (``benchmarks.run --quick``
+output filtered to ``^{`` lines); this tool compares the current run
+against the previous one and flags throughput drops / latency growth
+beyond a threshold — the ROADMAP "benchmark trajectory" item.
+
+    python tools/bench_diff.py OLD.json NEW.json [--threshold 0.15]
+                               [--json] [--strict]
+
+Direction is inferred from the field name: throughput-like fields
+(``*_per_sec``, ``speedup``) regress when they DROP, latency-like fields
+(``seconds``, ``repeat_seconds``) regress when they GROW.  Other numeric
+fields are reported informationally when they change but never flagged.
+Lines are matched by ``name``; when a name repeats (e.g. one
+``coexplore/cell`` line per model cell) the occurrences pair up in order,
+and a count mismatch skips the name with a note.
+
+Exit code is 0 unless ``--strict`` is passed and a regression was found
+(benchmarks on shared CI runners are noisy — the default is report-only).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: field-name suffixes where LARGER is better (regression = drop)
+HIGHER_IS_BETTER = ("_per_sec", "speedup")
+#: field names where SMALLER is better (regression = growth)
+LOWER_IS_BETTER = ("seconds", "repeat_seconds", "peak_traced_mb", "rss_mb")
+
+
+def load_lines(path: str) -> dict[str, list[dict]]:
+    """JSON-lines file -> {name: [records in file order]}."""
+    by_name: dict[str, list[dict]] = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or not line.startswith("{"):
+                continue
+            rec = json.loads(line)
+            by_name.setdefault(rec.get("name", "?"), []).append(rec)
+    return by_name
+
+
+def _direction(field: str) -> int:
+    """+1 higher-is-better, -1 lower-is-better, 0 informational."""
+    if field in LOWER_IS_BETTER:
+        return -1
+    if any(field.endswith(s) for s in HIGHER_IS_BETTER):
+        return 1
+    return 0
+
+
+def diff_records(old: dict, new: dict, threshold: float,
+                 name: str, index: int) -> list[dict]:
+    out = []
+    for field in sorted(set(old) & set(new)):
+        a, b = old[field], new[field]
+        if field == "name" or not all(
+                isinstance(x, (int, float)) and not isinstance(x, bool)
+                for x in (a, b)):
+            continue
+        if a == b:
+            continue
+        rel = (b - a) / abs(a) if a else float("inf")
+        d = _direction(field)
+        regressed = (d == 1 and rel < -threshold) or \
+                    (d == -1 and rel > threshold)
+        out.append({"name": name, "index": index, "field": field,
+                    "old": a, "new": b, "rel_change": round(rel, 4),
+                    "direction": {1: "higher_better", -1: "lower_better",
+                                  0: "info"}[d],
+                    "regressed": regressed})
+    return out
+
+
+def diff_files(old_path: str, new_path: str,
+               threshold: float) -> tuple[list[dict], list[str]]:
+    """Returns (changes, notes).  ``changes`` rows carry ``regressed``."""
+    old_by, new_by = load_lines(old_path), load_lines(new_path)
+    changes: list[dict] = []
+    notes: list[str] = []
+    for name in sorted(set(old_by) | set(new_by)):
+        olds, news = old_by.get(name, []), new_by.get(name, [])
+        if not olds:
+            notes.append(f"new benchmark line: {name}")
+            continue
+        if not news:
+            notes.append(f"benchmark line disappeared: {name}")
+            continue
+        if len(olds) != len(news):
+            notes.append(f"skipping {name}: {len(olds)} vs {len(news)} "
+                         f"occurrences")
+            continue
+        for i, (o, n) in enumerate(zip(olds, news)):
+            changes.append(diff_records(o, n, threshold, name, i))
+    return [c for group in changes for c in group], notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH_*.json line files")
+    ap.add_argument("old")
+    ap.add_argument("new")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="relative change that counts as a regression "
+                         "(default 0.15 = 15%%)")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable output (one summary object)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 when a regression is flagged")
+    args = ap.parse_args(argv)
+
+    changes, notes = diff_files(args.old, args.new, args.threshold)
+    regressions = [c for c in changes if c["regressed"]]
+
+    if args.json:
+        print(json.dumps({"threshold": args.threshold,
+                          "n_changes": len(changes),
+                          "n_regressions": len(regressions),
+                          "regressions": regressions,
+                          "changes": changes, "notes": notes},
+                         sort_keys=True))
+    else:
+        for note in notes:
+            print(f"  note: {note}")
+        perf = [c for c in changes if c["direction"] != "info"]
+        if not perf:
+            print("no tracked perf fields changed")
+        for c in perf:
+            idx = f"[{c['index']}]" if c["index"] else ""
+            mark = "REGRESSION" if c["regressed"] else "ok"
+            print(f"  {mark:>10}  {c['name']}{idx} {c['field']}: "
+                  f"{c['old']} -> {c['new']} ({c['rel_change']:+.1%})")
+        print(f"{len(regressions)} regression(s) beyond "
+              f"{args.threshold:.0%} across {len(perf)} tracked change(s)")
+
+    return 1 if (args.strict and regressions) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
