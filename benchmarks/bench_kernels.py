@@ -1,21 +1,34 @@
-"""Kernel-level benchmarks: block-skip rates of the sparsity-aware spike
-GEMM on real trained-SNN traffic (the TPU-granular analogue of the paper's
-PENC savings), and fused-LIF correctness/shape sweep timings in interpret
-mode.  Wall-clock here is CPU-interpret (no TPU) — the figure of merit is
-the SKIP FRACTION, which is hardware-independent."""
+"""Kernel benchmarks: micro (block-skip rates + fused-LIF timings) and an
+end-to-end BPTT benchmark of the training hot path.
+
+The micro section reports skip fractions of the sparsity-aware spike GEMM on
+real trained-SNN traffic (the TPU-granular analogue of the paper's PENC
+savings).  The BPTT section times one full forward+backward training step
+(``jax.value_and_grad`` of the rate loss through ``lax.scan``) for both
+matmul backends — pure jnp vs the block-skip Pallas kernel behind its
+custom_vjp — across the built-in workloads' T x population grid, emitting
+one JSON line per cell in the ``BENCH_*.json`` schema so
+``tools/bench_diff.py`` tracks the training hot path across runs.
+
+Wall-clock here is CPU-interpret (no TPU) — the hardware-independent figure
+of merit is the SKIP FRACTION.
+"""
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, emit_json, timed
 from repro.core import encoding, snn, train_snn
+from repro.core.workloads import registry
 from repro.data import synthetic
 from repro.kernels import ops, ref
 
 
-def run(quick: bool = False):
+def _micro(quick: bool) -> None:
     # trained-model traffic
     data = synthetic.make_images(seed=0, n_train=512, n_test=128)
     cfg = snn.SNNConfig(name="k", input_shape=(28, 28),
@@ -54,6 +67,74 @@ def run(quick: bool = False):
             u, s, c, beta=0.9, threshold=1.0)[0].block_until_ready(),
             repeats=1)
         emit(f"kernels/lif_step/{shape[0]}x{shape[1]}", us, "interpret-mode")
+
+
+def _dense_skip_fractions(cfg: snn.SNNConfig, params, spikes_in
+                          ) -> tuple[float, float]:
+    """Mean (base, profile-permuted) tile-skip fraction over the Dense
+    layers' input traffic — the tiles the kernel path actually skips.
+    ``layer_input_trains`` yields exactly one train per spiking layer."""
+    trains = snn.layer_input_trains(cfg, params, spikes_in)
+    bm, bk = snn.KERNEL_BLOCKS["block_m"], snn.KERNEL_BLOCKS["block_k"]
+    base, perm = [], []
+    for spec, train in zip(cfg.spiking_layers(), trains):
+        if isinstance(spec, snn.Dense):
+            flat = train.reshape(-1, int(np.prod(train.shape[2:])))
+            base.append(ops.skip_fraction(flat, bm, bk))
+            p = train_snn.train_firing_permutation(train)
+            perm.append(ops.skip_fraction(flat[:, p], bm, bk))
+    return float(np.mean(base)), float(np.mean(perm))
+
+
+def _bptt_cell(wl: registry.Workload, T: int, pop: float) -> None:
+    cfg = wl.build(T, pop)
+    data = wl.make_data(T)
+    res = train_snn.train(cfg, data, steps=wl.train_steps,
+                          batch_size=wl.batch_size, lr=wl.lr, seed=0)
+    xb = jnp.asarray(data.x_train[:wl.batch_size])
+    yb = jnp.asarray(data.y_train[:wl.batch_size])
+    key = jax.random.key(0)
+
+    step_seconds = {}
+    for backend in ("jnp", "spike_gemm"):
+        vg = jax.jit(jax.value_and_grad(
+            lambda p, b=backend: train_snn.loss_fn(cfg, p, key, xb, yb,
+                                                   matmul_backend=b)))
+        # repeats=3: these fields are regression-tracked by bench_diff, so
+        # average away single-sample scheduler noise on shared CI runners
+        _, us = timed(lambda: jax.block_until_ready(vg(res.params)),
+                      repeats=3)
+        step_seconds[backend] = us / 1e6
+
+    spikes_in = train_snn._encode_input(
+        jax.random.key(1), jnp.asarray(data.x_test[:32]), T)
+    skip, skip_profiled = _dense_skip_fractions(cfg, res.params, spikes_in)
+    emit_json(f"kernels/bptt/{wl.name}/T{T}/p{pop:g}",
+              jnp_step_seconds=round(step_seconds["jnp"], 6),
+              spike_gemm_step_seconds=round(step_seconds["spike_gemm"], 6),
+              speedup=round(step_seconds["jnp"]
+                            / max(step_seconds["spike_gemm"], 1e-12), 4),
+              skip_fraction=round(skip, 4),
+              skip_fraction_profiled=round(skip_profiled, 4),
+              accuracy=round(res.test_accuracy, 4))
+
+
+def _bptt(quick: bool) -> None:
+    names = ["mnist-mlp"] if quick else registry.names()
+    for name in names:
+        wl = dataclasses.replace(
+            registry.get(name),
+            n_train=256, n_test=64, train_steps=20 if quick else 60)
+        Ts = wl.num_steps_choices[:2] if quick else wl.num_steps_choices
+        pops = wl.population_choices[:2] if quick else wl.population_choices
+        for T in Ts:
+            for pop in pops:
+                _bptt_cell(wl, int(T), float(pop))
+
+
+def run(quick: bool = False):
+    _micro(quick)
+    _bptt(quick)
 
 
 if __name__ == "__main__":

@@ -14,14 +14,43 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 from typing import Any, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.lif import LIFParams, lif_step
+from repro.kernels import ops as kernel_ops
 
 PyTree = Any
+
+# ---------------------------------------------------------------------------
+# Matmul backends (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+# The accumulate phase of every Dense layer can run on either the pure-jnp
+# reference matmul or the block-skip Pallas kernel (``repro.kernels``,
+# wrapped in a custom_vjp so BPTT is unchanged).  Conv layers stay on
+# ``lax.conv`` for now.  ``None`` resolves through the environment so DSE
+# cell training can opt whole processes in without threading a flag.
+
+MATMUL_BACKENDS = ("jnp", "spike_gemm")
+MATMUL_BACKEND_ENV = "REPRO_MATMUL_BACKEND"
+
+#: kernel tile shape on the training path: batch rows are few (the f32
+#: sublane minimum) while K rides full 128-lane tiles — the skip granule
+#: benchmarks/bench_kernels.py measures.
+KERNEL_BLOCKS = {"block_m": 8, "block_n": 128, "block_k": 128}
+
+
+def resolve_matmul_backend(backend: Optional[str] = None) -> str:
+    """Resolve an explicit backend choice, falling back to the
+    ``REPRO_MATMUL_BACKEND`` environment variable, then ``"jnp"``."""
+    backend = backend or os.environ.get(MATMUL_BACKEND_ENV) or "jnp"
+    if backend not in MATMUL_BACKENDS:
+        raise ValueError(f"unknown matmul backend {backend!r}; "
+                         f"pick from {MATMUL_BACKENDS}")
+    return backend
 
 
 # ---------------------------------------------------------------------------
@@ -136,15 +165,27 @@ def init_params(key: jax.Array, cfg: SNNConfig, dtype=jnp.float32) -> PyTree:
 # Forward
 # ---------------------------------------------------------------------------
 
-def _layer_current(spec: LayerSpec, p: PyTree, s_in: jax.Array) -> jax.Array:
+def _layer_current(spec: LayerSpec, p: PyTree, s_in: jax.Array,
+                   matmul_backend: str = "jnp",
+                   perm: Optional[jax.Array] = None) -> jax.Array:
     """Synaptic current for one layer given the pre-synaptic spike tensor.
 
-    The binary matmul here is the accelerator's accumulate phase; on TPU it is
-    served by ``repro.kernels.spike_gemm`` (block-skip Pallas kernel) — the
-    pure-jnp path below is the reference semantics.
+    The binary matmul here is the accelerator's accumulate phase.  With
+    ``matmul_backend="spike_gemm"`` Dense layers route through
+    ``repro.kernels`` (block-skip Pallas forward + dense-reference backward
+    via custom_vjp); the jnp path is the reference semantics.  ``perm`` is an
+    optional profiled pre-synaptic permutation (``ops.firing_rate_permutation``)
+    that clusters cold neurons into skippable tiles — applied as
+    ``S[:, perm] @ W[perm, :]``, which leaves the product invariant.
     """
     if isinstance(spec, Dense):
         flat = s_in.reshape(s_in.shape[0], -1)
+        if matmul_backend == "spike_gemm":
+            w = p["w"]
+            if perm is not None:
+                flat, w = kernel_ops.apply_permutation(flat, w, perm)
+            return kernel_ops.spike_gemm_train(flat, w,
+                                               **KERNEL_BLOCKS) + p["b"]
         return flat @ p["w"] + p["b"]
     if isinstance(spec, Conv):
         out = jax.lax.conv_general_dilated(
@@ -178,7 +219,9 @@ def init_states(cfg: SNNConfig, batch: int, dtype=jnp.float32) -> list:
     return states
 
 
-def step(cfg: SNNConfig, params: PyTree, states: list, s_in: jax.Array
+def step(cfg: SNNConfig, params: PyTree, states: list, s_in: jax.Array,
+         matmul_backend: str = "jnp",
+         layer_perms: Optional[Sequence] = None
          ) -> tuple[list, list[jax.Array]]:
     """One time step through all layers.
 
@@ -186,12 +229,20 @@ def step(cfg: SNNConfig, params: PyTree, states: list, s_in: jax.Array
     is layer-pipelined so different layers process different time steps
     concurrently; functionally (spike-to-spike) the result is identical to
     this sequential sweep, which is what the validation checks.
+
+    ``layer_perms``: optional per-layer pre-synaptic permutations aligned
+    with ``cfg.layers`` (``None`` entries for unpermuted layers; see
+    ``train_snn.profiled_permutations``).
     """
+    if layer_perms is not None and len(layer_perms) != len(cfg.layers):
+        raise ValueError(f"layer_perms has {len(layer_perms)} entries for "
+                         f"{len(cfg.layers)} layers")
+    perms = layer_perms or (None,) * len(cfg.layers)
     new_states, spikes = [], []
     x = s_in
-    for spec, p, st in zip(cfg.layers, params, states):
+    for spec, p, st, perm in zip(cfg.layers, params, states, perms):
         if isinstance(spec, (Dense, Conv)):
-            cur = _layer_current(spec, p, x)
+            cur = _layer_current(spec, p, x, matmul_backend, perm)
             u_prev, s_prev = st
             u, s = lif_step(u_prev, s_prev, cur, spec.lif)
             new_states.append((u, s))
@@ -206,17 +257,24 @@ def step(cfg: SNNConfig, params: PyTree, states: list, s_in: jax.Array
 
 
 def apply(cfg: SNNConfig, params: PyTree, spike_input: jax.Array,
-          return_all_layers: bool = False):
+          return_all_layers: bool = False,
+          matmul_backend: Optional[str] = None,
+          layer_perms: Optional[Sequence] = None):
     """Run the net over a (T, B, ...) input spike train.
 
     Returns the output layer's (T, B, n_out) spike train; with
     ``return_all_layers`` also every hidden layer's train (instrumentation).
+    ``matmul_backend``/``layer_perms`` select the accumulate-phase execution
+    path (see ``_layer_current``); results are backend-invariant.
     """
+    backend = resolve_matmul_backend(matmul_backend)
     batch = spike_input.shape[1]
     states0 = init_states(cfg, batch)
 
     def scan_fn(states, s_in):
-        new_states, spikes = step(cfg, params, states, s_in)
+        new_states, spikes = step(cfg, params, states, s_in,
+                                  matmul_backend=backend,
+                                  layer_perms=layer_perms)
         out = spikes if return_all_layers else spikes[-1]
         return new_states, out
 
@@ -224,16 +282,20 @@ def apply(cfg: SNNConfig, params: PyTree, spike_input: jax.Array,
     return collected
 
 
-def spike_counts_per_layer(cfg: SNNConfig, params: PyTree,
-                           spike_input: jax.Array) -> list[jax.Array]:
-    """Per-layer **input** spike counts, shape (T, B) each — the traffic
-    statistic that drives the accelerator cycle model.
+def layer_input_trains(cfg: SNNConfig, params: PyTree,
+                       spike_input: jax.Array,
+                       matmul_backend: Optional[str] = None
+                       ) -> list[jax.Array]:
+    """The (T, B, ...) spike train **entering** each spiking layer.
 
-    Entry ``l`` counts spikes entering spiking layer ``l`` (so entry 0 counts
-    the encoded input train).  Pooling between layers is applied before
-    counting, because the hardware's ECU sees the pooled train.
+    Entry ``l`` is spiking layer ``l``'s input traffic (entry 0 is the
+    encoded input train); pooling between layers is applied first, because
+    the hardware's ECU sees the pooled train.  This is the statistic behind
+    both the cycle model (``spike_counts_per_layer``) and the profile-guided
+    tile permutation (``train_snn.profiled_permutations``).
     """
-    all_spikes = apply(cfg, params, spike_input, return_all_layers=True)
+    all_spikes = apply(cfg, params, spike_input, return_all_layers=True,
+                       matmul_backend=matmul_backend)
     # Build the input train of each spiking layer: input spikes, then each
     # spiking layer's output (pooled if a MaxPool follows it).
     trains = [spike_input]
@@ -251,5 +313,19 @@ def spike_counts_per_layer(cfg: SNNConfig, params: PyTree,
             trains.append(train)
             spiking_idx += 1
     # drop the final output train: it feeds no further layer
-    trains = trains[:-1]
+    return trains[:-1]
+
+
+def spike_counts_per_layer(cfg: SNNConfig, params: PyTree,
+                           spike_input: jax.Array,
+                           matmul_backend: Optional[str] = None
+                           ) -> list[jax.Array]:
+    """Per-layer **input** spike counts, shape (T, B) each — the traffic
+    statistic that drives the accelerator cycle model.
+
+    Entry ``l`` counts spikes entering spiking layer ``l`` (so entry 0 counts
+    the encoded input train); see ``layer_input_trains``.
+    """
+    trains = layer_input_trains(cfg, params, spike_input,
+                                matmul_backend=matmul_backend)
     return [t.reshape(t.shape[0], t.shape[1], -1).sum(-1) for t in trains]

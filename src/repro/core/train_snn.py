@@ -20,6 +20,7 @@ from repro import optim
 from repro.core import encoding, snn
 from repro.core.accelerator import cycle_model
 from repro.data import synthetic
+from repro.kernels import ops as kernel_ops
 
 PyTree = Any
 
@@ -32,34 +33,40 @@ class TrainResult:
     cfg: snn.SNNConfig
 
 
-def loss_fn(cfg: snn.SNNConfig, params: PyTree, key: jax.Array,
-            x: jax.Array, y: jax.Array) -> jax.Array:
+def _encode_input(key: jax.Array, x: jax.Array, num_steps: int) -> jax.Array:
     if x.ndim == 5:        # pre-encoded event data (B, T, H, W, C)
-        spikes_in = x.transpose(1, 0, 2, 3, 4)
-    else:
-        spikes_in = encoding.rate_encode(key, x, cfg.num_steps)
-    out_train = snn.apply(cfg, params, spikes_in)
+        return x.transpose(1, 0, 2, 3, 4)
+    return encoding.rate_encode(key, x, num_steps)
+
+
+def loss_fn(cfg: snn.SNNConfig, params: PyTree, key: jax.Array,
+            x: jax.Array, y: jax.Array,
+            matmul_backend: Optional[str] = None) -> jax.Array:
+    spikes_in = _encode_input(key, x, cfg.num_steps)
+    out_train = snn.apply(cfg, params, spikes_in,
+                          matmul_backend=matmul_backend)
     return encoding.rate_loss(out_train, y, cfg.num_classes)
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def _predict(cfg: snn.SNNConfig, params: PyTree, key: jax.Array, x: jax.Array):
-    if x.ndim == 5:
-        spikes_in = x.transpose(1, 0, 2, 3, 4)
-    else:
-        spikes_in = encoding.rate_encode(key, x, cfg.num_steps)
-    out_train = snn.apply(cfg, params, spikes_in)
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _predict(cfg: snn.SNNConfig, matmul_backend: Optional[str],
+             params: PyTree, key: jax.Array, x: jax.Array):
+    spikes_in = _encode_input(key, x, cfg.num_steps)
+    out_train = snn.apply(cfg, params, spikes_in,
+                          matmul_backend=matmul_backend)
     return encoding.population_decode(out_train, cfg.num_classes)
 
 
 def evaluate(cfg: snn.SNNConfig, params: PyTree, x: np.ndarray, y: np.ndarray,
-             batch_size: int = 256, seed: int = 1234) -> float:
+             batch_size: int = 256, seed: int = 1234,
+             matmul_backend: Optional[str] = None) -> float:
+    backend = snn.resolve_matmul_backend(matmul_backend)
     correct, total = 0, 0
     key = jax.random.key(seed)
     for i in range(0, len(x), batch_size):
         key, sub = jax.random.split(key)
         xb = jnp.asarray(x[i:i + batch_size])
-        pred = _predict(cfg, params, sub, xb)
+        pred = _predict(cfg, backend, params, sub, xb)
         correct += int((np.asarray(pred) == y[i:i + batch_size]).sum())
         total += len(y[i:i + batch_size])
     return correct / max(total, 1)
@@ -67,7 +74,9 @@ def evaluate(cfg: snn.SNNConfig, params: PyTree, x: np.ndarray, y: np.ndarray,
 
 def train(cfg: snn.SNNConfig, data: synthetic.Dataset, *,
           steps: int = 300, batch_size: int = 64, lr: float = 2e-3,
-          seed: int = 0, log_every: int = 50, verbose: bool = False) -> TrainResult:
+          seed: int = 0, log_every: int = 50, verbose: bool = False,
+          matmul_backend: Optional[str] = None) -> TrainResult:
+    backend = snn.resolve_matmul_backend(matmul_backend)
     key = jax.random.key(seed)
     key, pkey = jax.random.split(key)
     params = snn.init_params(pkey, cfg)
@@ -77,7 +86,8 @@ def train(cfg: snn.SNNConfig, data: synthetic.Dataset, *,
     @jax.jit
     def train_step(params, opt_state, key, x, y):
         loss, grads = jax.value_and_grad(
-            lambda p: loss_fn(cfg, p, key, x, y))(params)
+            lambda p: loss_fn(cfg, p, key, x, y,
+                              matmul_backend=backend))(params)
         updates, opt_state = tx.update(grads, opt_state, params)
         params = optim.apply_updates(params, updates)
         return params, opt_state, loss
@@ -94,26 +104,26 @@ def train(cfg: snn.SNNConfig, data: synthetic.Dataset, *,
         if verbose and step_i % log_every == 0:
             print(f"step {step_i:4d}  loss {float(loss):.4f}")
 
-    acc = evaluate(cfg, params, data.x_test, data.y_test)
+    acc = evaluate(cfg, params, data.x_test, data.y_test,
+                   matmul_backend=backend)
     return TrainResult(params=params, train_loss=losses, test_accuracy=acc, cfg=cfg)
 
 
 def dump_traces(cfg: snn.SNNConfig, params: PyTree, x: np.ndarray,
-                seed: int = 7, max_samples: int = 64) -> dict:
+                seed: int = 7, max_samples: int = 64,
+                matmul_backend: Optional[str] = None) -> dict:
     """Extract spike-traffic statistics for the accelerator model.
 
     Returns per-layer input spike counts with shape (T, N) (N = samples) —
-    the Configuration-Phase artifact the cycle model consumes.
+    the Configuration-Phase artifact the cycle model consumes.  The counts
+    are backend-invariant (tests/test_train_backend.py), so cached DSE cells
+    never depend on which matmul path trained them.
     """
     key = jax.random.key(seed)
     xb = jnp.asarray(x[:max_samples])
-    if xb.ndim == 4 and xb.shape[-1] in (1, 2):     # event data (N,T,H,W,C)? no-op
-        pass
-    if xb.ndim == 5:
-        spikes_in = xb.transpose(1, 0, 2, 3, 4)
-    else:
-        spikes_in = encoding.rate_encode(key, xb, cfg.num_steps)
-    counts = snn.spike_counts_per_layer(cfg, params, spikes_in)
+    spikes_in = _encode_input(key, xb, cfg.num_steps)
+    counts = snn.spike_counts_per_layer(cfg, params, spikes_in,
+                                        matmul_backend=matmul_backend)
     return {
         "layer_input_spike_counts": [np.asarray(c) for c in counts],
         "layer_sizes": cfg.layer_sizes(),
@@ -122,8 +132,45 @@ def dump_traces(cfg: snn.SNNConfig, params: PyTree, x: np.ndarray,
 
 
 def trace_counts(cfg: snn.SNNConfig, params: PyTree, x: np.ndarray,
-                 seed: int = 7, max_samples: int = 64) -> list[np.ndarray]:
+                 seed: int = 7, max_samples: int = 64,
+                 matmul_backend: Optional[str] = None) -> list[np.ndarray]:
     """``dump_traces`` reduced to the per-layer (T,) mean traffic the cycle
     model consumes — the Configuration-Phase artifact most callers want."""
-    traces = dump_traces(cfg, params, x, seed=seed, max_samples=max_samples)
+    traces = dump_traces(cfg, params, x, seed=seed, max_samples=max_samples,
+                         matmul_backend=matmul_backend)
     return cycle_model.counts_from_traces(traces["layer_input_spike_counts"])
+
+
+def train_firing_permutation(train: jax.Array) -> jax.Array:
+    """THE profiling statistic of the kernel path: per-input-neuron mean
+    firing rate of a (T, B, ...) spike train, sorted cold-first
+    (``ops.firing_rate_permutation``).  Single definition so the benchmark's
+    ``skip_fraction_profiled`` measures exactly the permutation training
+    would apply."""
+    flat = train.reshape(-1, int(np.prod(train.shape[2:])))
+    return kernel_ops.firing_rate_permutation(flat.mean(0))
+
+
+def profiled_permutations(cfg: snn.SNNConfig, params: PyTree, x: np.ndarray,
+                          seed: int = 7, max_samples: int = 64) -> list:
+    """Per-layer pre-synaptic permutations from profiled firing rates.
+
+    Runs a profiling pass over ``x`` and sorts each Dense layer's input axis
+    by observed firing rate (``train_firing_permutation``) so cold neurons
+    cluster into skippable MXU tiles.  Returns a list aligned with
+    ``cfg.layers`` (``None`` for Conv/MaxPool), ready for
+    ``snn.apply(..., matmul_backend="spike_gemm", layer_perms=...)``.
+    """
+    key = jax.random.key(seed)
+    xb = jnp.asarray(x[:max_samples])
+    spikes_in = _encode_input(key, xb, cfg.num_steps)
+    trains = iter(snn.layer_input_trains(cfg, params, spikes_in))
+    perms: list = []
+    for spec in cfg.layers:
+        perm = None
+        if isinstance(spec, (snn.Dense, snn.Conv)):
+            train = next(trains)
+            if isinstance(spec, snn.Dense):
+                perm = train_firing_permutation(train)
+        perms.append(perm)
+    return perms

@@ -203,9 +203,11 @@ class TraceCache:
         data = workload.make_data(T)
         res = train_snn.train(cfg, data, steps=workload.train_steps,
                               batch_size=workload.batch_size,
-                              lr=workload.lr, seed=seed)
+                              lr=workload.lr, seed=seed,
+                              matmul_backend=workload.matmul_backend)
         traces = train_snn.dump_traces(cfg, res.params, data.x_test,
-                                       max_samples=workload.trace_samples)
+                                       max_samples=workload.trace_samples,
+                                       matmul_backend=workload.matmul_backend)
         params = jax.tree.map(np.asarray, res.params)
         counts = [np.asarray(c, np.float32)
                   for c in traces["layer_input_spike_counts"]]

@@ -24,7 +24,7 @@ way) and register them under new names.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 from repro.core import snn
 from repro.data import synthetic
@@ -54,11 +54,23 @@ class Workload:
     lr: float = 2e-3
     trace_samples: int = 64                 # test samples traced per cell
     version: int = 1                        # bump to invalidate cached cells
+    # Execution backend for the training forward pass ("jnp" | "spike_gemm";
+    # None defers to the REPRO_MATMUL_BACKEND env var so whole processes —
+    # e.g. cellfarm workers — can opt in without touching recipes).
+    # Deliberately NOT part of signature(): the spike_gemm path is
+    # parity-locked to the jnp reference (tests/test_train_backend.py), so
+    # cached cells are backend-invariant and both recipes share one key.
+    matmul_backend: Optional[str] = None
 
     def __post_init__(self):
         if self.dataset not in DATASET_FAMILIES:
             raise ValueError(f"unknown dataset family {self.dataset!r}; "
                              f"pick from {DATASET_FAMILIES}")
+        if (self.matmul_backend is not None
+                and self.matmul_backend not in snn.MATMUL_BACKENDS):
+            raise ValueError(f"unknown matmul backend "
+                             f"{self.matmul_backend!r}; "
+                             f"pick from {snn.MATMUL_BACKENDS}")
         want = "event" if self.dataset == "dvs" else "rate"
         if self.encoding != want:
             raise ValueError(f"dataset {self.dataset!r} requires "

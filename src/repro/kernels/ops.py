@@ -37,20 +37,87 @@ def lif_step(u_prev: jax.Array, s_prev: jax.Array, current: jax.Array, *,
     return u[:B, :N], s[:B, :N]
 
 
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k"))
+def block_flags(spikes: jax.Array, *, block_m: int = 128,
+                block_k: int = 128) -> jax.Array:
+    """Per-tile occupancy flags for ``spikes`` padded to block multiples —
+    the array ``spike_gemm`` prefetches.  Computed once here, it can be fed
+    back via ``spike_gemm(..., flags=...)`` so hot loops that already
+    measured ``skip_fraction`` don't pay the reduction twice."""
+    s = _pad_to(spikes, (block_m, block_k))
+    return ref.block_flags_ref(s, block_m, block_k)
+
+
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
                                              "interpret"))
 def spike_gemm(spikes: jax.Array, weights: jax.Array, *,
+               flags: jax.Array = None,
                block_m: int = 128, block_n: int = 128, block_k: int = 128,
                interpret: bool = True) -> jax.Array:
-    """Sparsity-aware S @ W with block-level spike skipping."""
+    """Sparsity-aware S @ W with block-level spike skipping.
+
+    ``flags``: optional precomputed occupancy from ``block_flags`` (same
+    block shape); when omitted the flags are computed here.
+    """
     M, K = spikes.shape
     _, N = weights.shape
     s = _pad_to(spikes, (block_m, block_k))
     w = _pad_to(weights, (block_k, block_n))
-    flags = ref.block_flags_ref(s, block_m, block_k)
+    if flags is None:
+        flags = ref.block_flags_ref(s, block_m, block_k)
+    want = (s.shape[0] // block_m, s.shape[1] // block_k)
+    if flags.shape != want:
+        raise ValueError(
+            f"flags shape {flags.shape} does not match the {want} tile grid "
+            f"of spikes {spikes.shape} at block_m={block_m}, "
+            f"block_k={block_k}; build them with ops.block_flags on the "
+            f"same spike matrix and block sizes")
     out = spike_gemm_pallas(flags, s, w, block_m=block_m, block_n=block_n,
                             block_k=block_k, interpret=interpret)
     return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# Differentiable spike GEMM (the training hot path)
+# ---------------------------------------------------------------------------
+# BPTT needs gradients through the accumulate phase; the Pallas kernel only
+# defines a forward.  ``spike_gemm_train`` wraps it in a ``jax.custom_vjp``:
+# block-skip forward, *dense reference* backward (the exact jnp cotangents
+# dS = g @ W^T, dW = S^T @ g) — so surrogate-gradient training through
+# ``lax.scan`` is numerically the same as the pure-jnp path while the
+# forward skips empty spike tiles.  DESIGN.md §11.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _spike_gemm_train(blocks: tuple, spikes: jax.Array,
+                      weights: jax.Array) -> jax.Array:
+    block_m, block_n, block_k, interpret = blocks
+    return spike_gemm(spikes, weights, block_m=block_m, block_n=block_n,
+                      block_k=block_k, interpret=interpret)
+
+
+def _spike_gemm_train_fwd(blocks, spikes, weights):
+    return _spike_gemm_train(blocks, spikes, weights), (spikes, weights)
+
+
+def _spike_gemm_train_bwd(blocks, res, g):
+    spikes, weights = res
+    g32 = g.astype(jnp.float32)
+    d_spikes = jnp.dot(g32, weights.T,
+                       preferred_element_type=jnp.float32).astype(spikes.dtype)
+    d_weights = jnp.dot(spikes.T, g32,
+                        preferred_element_type=jnp.float32).astype(weights.dtype)
+    return d_spikes, d_weights
+
+
+_spike_gemm_train.defvjp(_spike_gemm_train_fwd, _spike_gemm_train_bwd)
+
+
+def spike_gemm_train(spikes: jax.Array, weights: jax.Array, *,
+                     block_m: int = 128, block_n: int = 128,
+                     block_k: int = 128, interpret: bool = True) -> jax.Array:
+    """Differentiable S @ W: block-skip Pallas forward, dense jnp backward."""
+    return _spike_gemm_train((block_m, block_n, block_k, interpret),
+                             spikes, weights)
 
 
 @functools.partial(jax.jit, static_argnames=("capacity", "block_b",
@@ -66,13 +133,24 @@ def penc_compact(spikes: jax.Array, capacity: int, *, block_b: int = 8,
     return idx[:B], cnt[:B]
 
 
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k"))
+def _skip_fraction(spikes: jax.Array, *, block_m: int, block_k: int):
+    flags = block_flags(spikes, block_m=block_m, block_k=block_k)
+    return 1.0 - flags.astype(jnp.float32).mean()
+
+
 def skip_fraction(spikes: jax.Array, block_m: int = 128,
                   block_k: int = 128) -> float:
     """Fraction of (M,K) tiles the kernel skips — the measurable benefit of
-    the sparsity-aware design on given traffic."""
-    s = _pad_to(spikes, (block_m, block_k))
-    flags = ref.block_flags_ref(s, block_m, block_k)
-    return float(1.0 - flags.mean())
+    the sparsity-aware design on given traffic.
+
+    Jitted (pad + tile-reduce fuse and the trace is cached per shape), so
+    calling it on the benchmark hot loop costs one compiled reduction, not
+    an eager re-pad per call; pair with ``block_flags`` + ``spike_gemm(...,
+    flags=...)`` to reuse the same occupancy for the matmul itself."""
+    # clamp: fp rounding of the mean can land a hair past 1.0
+    return max(0.0, float(_skip_fraction(spikes, block_m=block_m,
+                                         block_k=block_k)))
 
 
 # ---------------------------------------------------------------------------

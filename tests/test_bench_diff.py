@@ -51,6 +51,25 @@ def test_improvements_and_info_fields_not_flagged(tmp_path):
     assert _run(str(old), str(new), "--strict").returncode == 0
 
 
+def test_suffix_matched_directions(tmp_path):
+    """The BPTT kernel benchmark's fields are tracked by suffix:
+    ``*_step_seconds`` regresses on growth, ``speedup`` on drop, and
+    ``skip_fraction`` stays informational."""
+    old = tmp_path / "old.json"
+    new = tmp_path / "new.json"
+    _write(old, [{"name": "kernels/bptt/mnist-mlp/T4/p1",
+                  "jnp_step_seconds": 1.0, "spike_gemm_step_seconds": 2.0,
+                  "speedup": 0.5, "skip_fraction": 0.4}])
+    _write(new, [{"name": "kernels/bptt/mnist-mlp/T4/p1",
+                  "jnp_step_seconds": 1.0, "spike_gemm_step_seconds": 3.0,
+                  "speedup": 0.33, "skip_fraction": 0.1}])
+    d = json.loads(_run(str(old), str(new), "--json").stdout)
+    flagged = {r["field"] for r in d["regressions"]}
+    assert flagged == {"spike_gemm_step_seconds", "speedup"}
+    info = [c for c in d["changes"] if c["field"] == "skip_fraction"]
+    assert info and info[0]["direction"] == "info"
+
+
 def test_threshold_and_duplicate_names(tmp_path):
     old = tmp_path / "old.json"
     new = tmp_path / "new.json"

@@ -125,8 +125,8 @@ class TestSpikeGemm:
         np.testing.assert_allclose(np.asarray(out), s @ w, atol=1e-3)
 
     def test_gradient_path_via_ref(self):
-        """Training uses the ref path (kernel is inference-side); sanity-check
-        the oracle is differentiable."""
+        """The oracle's implicit gradient (what the custom_vjp backward
+        reproduces — see tests/test_kernel_grads.py for the kernel side)."""
         s = (jax.random.uniform(jax.random.key(0), (16, 32)) < 0.3
              ).astype(jnp.float32)
         w = jax.random.normal(jax.random.key(1), (32, 8))
@@ -134,6 +134,91 @@ class TestSpikeGemm:
         np.testing.assert_allclose(np.asarray(g),
                                    np.asarray(jnp.broadcast_to(s.sum(0)[:, None],
                                                                (32, 8))))
+
+
+class TestKernelPlumbing:
+    """Property/edge tests for the wrapper layer the training path rides:
+    padding, occupancy flags, skip_fraction caching, PENC edges, and the
+    profiled permutation's exact-equality invariance."""
+
+    @pytest.mark.parametrize("shape,mults", [((8, 128), (8, 128)),
+                                             ((64, 512), (8, 128)),
+                                             ((128, 256), (128, 128))])
+    def test_pad_to_noop_on_aligned_shapes(self, shape, mults):
+        x = jnp.ones(shape)
+        assert ops._pad_to(x, mults) is x       # no copy, not even identity
+
+    def test_pad_to_pads_with_zeros(self):
+        x = jnp.ones((5, 100))
+        padded = ops._pad_to(x, (8, 128))
+        assert padded.shape == (8, 128)
+        np.testing.assert_array_equal(np.asarray(padded[:5, :100]), 1.0)
+        assert float(padded.sum()) == 500.0     # padding contributed nothing
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_skip_fraction_consistent_with_flags(self, seed):
+        """skip_fraction (jitted) == 1 - mean(block_flags_ref) on the padded
+        matrix, for ragged shapes."""
+        rng = np.random.default_rng(seed)
+        s = jnp.asarray((rng.random((37, 300)) < 0.02).astype(np.float32))
+        flags = ref.block_flags_ref(ops._pad_to(s, (8, 128)), 8, 128)
+        want = float(1.0 - np.asarray(flags, np.float32).mean())
+        assert ops.skip_fraction(s, 8, 128) == pytest.approx(want, abs=1e-7)
+
+    def test_spike_gemm_reuses_caller_flags(self):
+        """Precomputed block_flags short-circuit the in-call reduction and
+        give bit-identical output."""
+        k1, k2 = jax.random.split(jax.random.key(5))
+        s = (jax.random.uniform(k1, (40, 300)) < 0.05).astype(jnp.float32)
+        w = jax.random.normal(k2, (300, 150), jnp.float32)
+        flags = ops.block_flags(s, block_m=8, block_k=128)
+        got = ops.spike_gemm(s, w, flags=flags, block_m=8)
+        want = ops.spike_gemm(s, w, block_m=8)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_spike_gemm_rejects_mismatched_flags(self):
+        s = jnp.ones((16, 256), jnp.float32)
+        w = jnp.ones((256, 128), jnp.float32)
+        bad = jnp.ones((1, 1), jnp.int32)
+        with pytest.raises(ValueError, match="tile grid"):
+            ops.spike_gemm(s, w, flags=bad, block_m=8)
+
+    def test_penc_empty_rows(self):
+        """Rows with no spikes compact to all -1 addresses and count 0."""
+        s = jnp.zeros((4, 96), jnp.float32)
+        idx, cnt = ops.penc_compact(s, capacity=32)
+        np.testing.assert_array_equal(np.asarray(idx), -1)
+        np.testing.assert_array_equal(np.asarray(cnt), 0)
+
+    def test_penc_mixed_overflow_and_empty(self):
+        """Capacity overflow (dense row) and empty row side by side: the
+        dense row keeps its first ``capacity`` addresses but reports the
+        true spike count; the empty row stays untouched."""
+        s = jnp.stack([jnp.ones(64, jnp.float32), jnp.zeros(64, jnp.float32)])
+        idx, cnt = ops.penc_compact(s, capacity=8)
+        np.testing.assert_array_equal(np.asarray(idx[0]), np.arange(8))
+        assert int(cnt[0]) == 64
+        np.testing.assert_array_equal(np.asarray(idx[1]), -1)
+        assert int(cnt[1]) == 0
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_profiled_permutation_exact_equality(self, seed):
+        """Permutation invariance holds EXACTLY, not just to tolerance:
+        with weights on a 1/256 grid every accumulate is an exact fp32 sum,
+        so reordering the heavy-tailed pre-synaptic axis cannot change a
+        single bit of the output."""
+        rng = np.random.default_rng(seed)
+        K = 1024
+        rates = np.where(rng.random(K) < 0.8, 0.002, 0.2)
+        s = jnp.asarray((rng.random((24, K)) < rates).astype(np.float32))
+        w = jnp.asarray(rng.integers(-64, 64, size=(K, 96)) / 256.0,
+                        dtype=jnp.float32)
+        perm = ops.firing_rate_permutation(s.mean(0))
+        got = ops.spike_gemm_profiled(s, w, perm, block_m=8)
+        want = ops.spike_gemm(s, w, block_m=8)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        # and the permutation is a real permutation of the axis
+        assert sorted(np.asarray(perm).tolist()) == list(range(K))
 
 
 class TestPENCCompact:

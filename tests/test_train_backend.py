@@ -1,0 +1,157 @@
+"""End-to-end training parity between the jnp and spike_gemm backends.
+
+The kernel path must be a training-equivalent of the reference: same loss
+trajectory and final accuracy from the same seed, identical spike traces
+from the same params, and — because of that — one shared cache key per cell
+regardless of which backend trained it (backend-invariant DSE cells).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import snn, train_snn, workloads
+from repro.core.workloads import cache
+from repro.data import synthetic
+
+
+def _small_cfg(num_steps=5):
+    return snn.SNNConfig(name="parity", input_shape=(12, 12),
+                         layers=(snn.Dense(24), snn.Dense(10)),
+                         num_classes=10, num_steps=num_steps)
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    return synthetic.make_images(name="synth-parity", seed=5, n_train=192,
+                                 n_test=64, h=12, w=12)
+
+
+class TestTrainingParity:
+    def test_loss_trajectory_and_accuracy(self, small_data):
+        cfg = _small_cfg()
+        runs = {}
+        for backend in snn.MATMUL_BACKENDS:
+            runs[backend] = train_snn.train(
+                cfg, small_data, steps=20, batch_size=32, seed=11,
+                matmul_backend=backend)
+        l_jnp = np.asarray(runs["jnp"].train_loss)
+        l_ker = np.asarray(runs["spike_gemm"].train_loss)
+        np.testing.assert_allclose(l_jnp, l_ker, atol=1e-3, rtol=1e-3)
+        assert abs(runs["jnp"].test_accuracy
+                   - runs["spike_gemm"].test_accuracy) <= 0.05
+
+    def test_traces_backend_invariant(self, small_data):
+        """Same params => bit-identical dump_traces/trace_counts under both
+        backends (the property that makes cached cells backend-free)."""
+        cfg = _small_cfg()
+        res = train_snn.train(cfg, small_data, steps=10, batch_size=32,
+                              seed=3)
+        traces, counts = {}, {}
+        for backend in snn.MATMUL_BACKENDS:
+            traces[backend] = train_snn.dump_traces(
+                cfg, res.params, small_data.x_test, max_samples=32,
+                matmul_backend=backend)
+            counts[backend] = train_snn.trace_counts(
+                cfg, res.params, small_data.x_test, max_samples=32,
+                matmul_backend=backend)
+        for a, b in zip(traces["jnp"]["layer_input_spike_counts"],
+                        traces["spike_gemm"]["layer_input_spike_counts"]):
+            np.testing.assert_array_equal(a, b)
+        for a, b in zip(counts["jnp"], counts["spike_gemm"]):
+            np.testing.assert_array_equal(a, b)
+
+    def test_evaluate_backend_invariant(self, small_data):
+        cfg = _small_cfg()
+        res = train_snn.train(cfg, small_data, steps=10, batch_size=32,
+                              seed=3)
+        acc_j = train_snn.evaluate(cfg, res.params, small_data.x_test,
+                                   small_data.y_test, matmul_backend="jnp")
+        acc_k = train_snn.evaluate(cfg, res.params, small_data.x_test,
+                                   small_data.y_test,
+                                   matmul_backend="spike_gemm")
+        assert acc_j == acc_k
+
+
+class TestBackendResolution:
+    def test_explicit_arg_wins(self, monkeypatch):
+        monkeypatch.setenv(snn.MATMUL_BACKEND_ENV, "spike_gemm")
+        assert snn.resolve_matmul_backend("jnp") == "jnp"
+
+    def test_env_var_default(self, monkeypatch):
+        monkeypatch.setenv(snn.MATMUL_BACKEND_ENV, "spike_gemm")
+        assert snn.resolve_matmul_backend() == "spike_gemm"
+        monkeypatch.delenv(snn.MATMUL_BACKEND_ENV)
+        assert snn.resolve_matmul_backend() == "jnp"
+
+    def test_unknown_backend_rejected(self, monkeypatch):
+        with pytest.raises(ValueError, match="unknown matmul backend"):
+            snn.resolve_matmul_backend("cuda")
+        monkeypatch.setenv(snn.MATMUL_BACKEND_ENV, "bogus")
+        with pytest.raises(ValueError, match="unknown matmul backend"):
+            snn.resolve_matmul_backend()
+
+
+class TestWorkloadRecipe:
+    def _tiny(self, **kw):
+        base = dict(name="tiny-backend", dataset="mnist", input_shape=(28, 28),
+                    layers=(snn.Dense(8),), num_classes=10, pcr=1,
+                    n_train=96, n_test=32, train_steps=3, trace_samples=8)
+        base.update(kw)
+        return workloads.Workload(**base)
+
+    def test_backend_excluded_from_signature_and_key(self):
+        wl_j = self._tiny()
+        wl_k = self._tiny(matmul_backend="spike_gemm")
+        assert wl_j.signature() == wl_k.signature()
+        a = {"num_steps": 4, "population": 1.0}
+        assert cache.cell_key(wl_j, a, 0) == cache.cell_key(wl_k, a, 0)
+
+    def test_invalid_backend_rejected(self):
+        with pytest.raises(ValueError, match="unknown matmul backend"):
+            self._tiny(matmul_backend="bogus")
+
+    def test_default_recipe_defers_to_env(self, monkeypatch):
+        """An unset recipe backend (None) falls through to the env var, so
+        cellfarm workers can opt whole processes in (DESIGN.md §11)."""
+        wl = self._tiny()
+        assert wl.matmul_backend is None
+        monkeypatch.setenv(snn.MATMUL_BACKEND_ENV, "spike_gemm")
+        assert snn.resolve_matmul_backend(wl.matmul_backend) == "spike_gemm"
+        monkeypatch.delenv(snn.MATMUL_BACKEND_ENV)
+        assert snn.resolve_matmul_backend(wl.matmul_backend) == "jnp"
+        # an explicit recipe choice pins the backend regardless of env
+        monkeypatch.setenv(snn.MATMUL_BACKEND_ENV, "spike_gemm")
+        assert snn.resolve_matmul_backend(
+            self._tiny(matmul_backend="jnp").matmul_backend) == "jnp"
+
+    def test_cell_trained_on_jnp_is_hit_for_kernel_recipe(self, tmp_path):
+        """The shared key means a jnp-trained cell resolves as a cache hit
+        for the spike_gemm recipe — no retraining, identical artifact."""
+        tc = cache.TraceCache(root=str(tmp_path))
+        a = {"num_steps": 4, "population": 1.0}
+        cell_j = tc.resolve(self._tiny(), a, seed=0)
+        assert not cell_j.cache_hit
+        cell_k = tc.resolve(self._tiny(matmul_backend="spike_gemm"), a,
+                            seed=0)
+        assert cell_k.cache_hit
+        for x, y in zip(cell_j.counts, cell_k.counts):
+            np.testing.assert_array_equal(x, y)
+
+    def test_kernel_recipe_trains_through_cache(self, tmp_path):
+        """A spike_gemm-recipe cell trains end-to-end through TraceCache and
+        produces the same artifact a jnp recipe would."""
+        tc_k = cache.TraceCache(root=str(tmp_path / "k"))
+        tc_j = cache.TraceCache(root=str(tmp_path / "j"))
+        a = {"num_steps": 3, "population": 1.0}
+        cell_k = tc_k.resolve(self._tiny(matmul_backend="spike_gemm"), a,
+                              seed=1)
+        cell_j = tc_j.resolve(self._tiny(), a, seed=1)
+        assert not cell_k.cache_hit and not cell_j.cache_hit
+        assert cell_k.key == cell_j.key
+        np.testing.assert_allclose(cell_k.accuracy, cell_j.accuracy,
+                                   atol=0.05)
+        for x, y in zip(cell_k.counts, cell_j.counts):
+            np.testing.assert_array_equal(x, y)

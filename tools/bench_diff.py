@@ -8,9 +8,9 @@ beyond a threshold — the ROADMAP "benchmark trajectory" item.
     python tools/bench_diff.py OLD.json NEW.json [--threshold 0.15]
                                [--json] [--strict]
 
-Direction is inferred from the field name: throughput-like fields
-(``*_per_sec``, ``speedup``) regress when they DROP, latency-like fields
-(``seconds``, ``repeat_seconds``) regress when they GROW.  Other numeric
+Direction is inferred from the field-name suffix: throughput-like fields
+(``*_per_sec``, ``*speedup``) regress when they DROP, latency/footprint
+fields (``*seconds``, ``*_mb``) regress when they GROW.  Other numeric
 fields are reported informationally when they change but never flagged.
 Lines are matched by ``name``; when a name repeats (e.g. one
 ``coexplore/cell`` line per model cell) the occurrences pair up in order,
@@ -27,8 +27,9 @@ import sys
 
 #: field-name suffixes where LARGER is better (regression = drop)
 HIGHER_IS_BETTER = ("_per_sec", "speedup")
-#: field names where SMALLER is better (regression = growth)
-LOWER_IS_BETTER = ("seconds", "repeat_seconds", "peak_traced_mb", "rss_mb")
+#: field-name suffixes where SMALLER is better (regression = growth) —
+#: covers "seconds", "repeat_seconds", "jnp_step_seconds", "rss_mb", ...
+LOWER_IS_BETTER = ("seconds", "_mb")
 
 
 def load_lines(path: str) -> dict[str, list[dict]]:
@@ -46,7 +47,7 @@ def load_lines(path: str) -> dict[str, list[dict]]:
 
 def _direction(field: str) -> int:
     """+1 higher-is-better, -1 lower-is-better, 0 informational."""
-    if field in LOWER_IS_BETTER:
+    if any(field.endswith(s) for s in LOWER_IS_BETTER):
         return -1
     if any(field.endswith(s) for s in HIGHER_IS_BETTER):
         return 1
