@@ -3,12 +3,15 @@ end-to-end BPTT benchmark of the training hot path.
 
 The micro section reports skip fractions of the sparsity-aware spike GEMM on
 real trained-SNN traffic (the TPU-granular analogue of the paper's PENC
-savings).  The BPTT section times one full forward+backward training step
-(``jax.value_and_grad`` of the rate loss through ``lax.scan``) for both
-matmul backends — pure jnp vs the block-skip Pallas kernel behind its
-custom_vjp — across the built-in workloads' T x population grid, emitting
-one JSON line per cell in the ``BENCH_*.json`` schema so
-``tools/bench_diff.py`` tracks the training hot path across runs.
+savings).  The BPTT section times the forward (``loss_fn``) and one full
+forward+backward training step (``jax.value_and_grad`` of the rate loss
+through ``lax.scan``) for all three matmul backends — pure jnp, the
+block-skip Pallas kernel (now with block-skip *backward* kernels behind its
+custom_vjp), and the fused GEMM+LIF scan-step kernel — across the built-in
+workloads' T x population grid, emitting one JSON line per cell in the
+``BENCH_*.json`` schema (``*_fwd_seconds`` / ``*_bwd_seconds`` /
+``*_step_seconds`` per backend, ``skip_fraction`` / ``bwd_skip_fraction``)
+so ``tools/bench_diff.py`` tracks the training hot path across runs.
 
 Wall-clock here is CPU-interpret (no TPU) — the hardware-independent figure
 of merit is the SKIP FRACTION.
@@ -95,28 +98,47 @@ def _bptt_cell(wl: registry.Workload, T: int, pop: float) -> None:
     yb = jnp.asarray(data.y_train[:wl.batch_size])
     key = jax.random.key(0)
 
+    fields = {}
     step_seconds = {}
-    for backend in ("jnp", "spike_gemm"):
+    for backend in snn.MATMUL_BACKENDS:
+        fwd = jax.jit(
+            lambda p, b=backend: train_snn.loss_fn(cfg, p, key, xb, yb,
+                                                   matmul_backend=b))
         vg = jax.jit(jax.value_and_grad(
             lambda p, b=backend: train_snn.loss_fn(cfg, p, key, xb, yb,
                                                    matmul_backend=b)))
         # repeats=3: these fields are regression-tracked by bench_diff, so
         # average away single-sample scheduler noise on shared CI runners
+        _, us_fwd = timed(lambda: jax.block_until_ready(fwd(res.params)),
+                          repeats=3)
         _, us = timed(lambda: jax.block_until_ready(vg(res.params)),
                       repeats=3)
         step_seconds[backend] = us / 1e6
+        fields[f"{backend}_fwd_seconds"] = round(us_fwd / 1e6, 6)
+        # the backward's cost is the fwd+bwd step minus the fwd-only pass
+        # (both jitted end to end; clamp against scheduler noise)
+        fields[f"{backend}_bwd_seconds"] = round(
+            max((us - us_fwd) / 1e6, 0.0), 6)
+        fields[f"{backend}_step_seconds"] = round(us / 1e6, 6)
 
     spikes_in = train_snn._encode_input(
         jax.random.key(1), jnp.asarray(data.x_test[:32]), T)
     skip, skip_profiled = _dense_skip_fractions(cfg, res.params, spikes_in)
     emit_json(f"kernels/bptt/{wl.name}/T{T}/p{pop:g}",
-              jnp_step_seconds=round(step_seconds["jnp"], 6),
-              spike_gemm_step_seconds=round(step_seconds["spike_gemm"], 6),
               speedup=round(step_seconds["jnp"]
                             / max(step_seconds["spike_gemm"], 1e-12), 4),
+              fused_speedup=round(
+                  step_seconds["jnp"]
+                  / max(step_seconds["spike_gemm_fused"], 1e-12), 4),
               skip_fraction=round(skip, 4),
               skip_fraction_profiled=round(skip_profiled, 4),
-              accuracy=round(res.test_accuracy, 4))
+              # dW = S^T.g reuses the forward's occupancy flags verbatim, so
+              # the backward's spike-side pass skips exactly the tiles the
+              # forward skips; the dS pass adds cotangent-occupancy skips on
+              # top (zero early in training, grows as surrogates saturate)
+              bwd_skip_fraction=round(skip, 4),
+              accuracy=round(res.test_accuracy, 4),
+              **fields)
 
 
 def _bptt(quick: bool) -> None:

@@ -26,21 +26,26 @@ from repro.kernels import ops as kernel_ops
 PyTree = Any
 
 # ---------------------------------------------------------------------------
-# Matmul backends (DESIGN.md §11)
+# Matmul backends (DESIGN.md §11–§12)
 # ---------------------------------------------------------------------------
-# The accumulate phase of every Dense layer can run on either the pure-jnp
-# reference matmul or the block-skip Pallas kernel (``repro.kernels``,
-# wrapped in a custom_vjp so BPTT is unchanged).  Conv layers stay on
-# ``lax.conv`` for now.  ``None`` resolves through the environment so DSE
-# cell training can opt whole processes in without threading a flag.
+# The accumulate phase of every Dense layer can run on the pure-jnp
+# reference matmul, the block-skip Pallas kernel (``repro.kernels``, wrapped
+# in a custom_vjp whose backward is also block-skip), or the fused
+# GEMM+LIF scan-step kernel (``spike_gemm_fused``: the LIF update runs in
+# the accumulate epilogue so membrane state never round-trips through HBM).
+# Conv layers stay on ``lax.conv`` for now.  ``None`` resolves through the
+# environment so DSE cell training can opt whole processes in without
+# threading a flag.
 
-MATMUL_BACKENDS = ("jnp", "spike_gemm")
+MATMUL_BACKENDS = ("jnp", "spike_gemm", "spike_gemm_fused")
 MATMUL_BACKEND_ENV = "REPRO_MATMUL_BACKEND"
 
-#: kernel tile shape on the training path: batch rows are few (the f32
-#: sublane minimum) while K rides full 128-lane tiles — the skip granule
-#: benchmarks/bench_kernels.py measures.
-KERNEL_BLOCKS = {"block_m": 8, "block_n": 128, "block_k": 128}
+#: kernel tile shape on the training path: batch rows are few (``block_m``
+#: shares the f32 sublane minimum with the standalone LIF kernel's
+#: ``block_b`` — one constant, see kernels/lif_step.py) while K rides full
+#: 128-lane tiles — the skip granule benchmarks/bench_kernels.py measures.
+KERNEL_BLOCKS = {"block_m": kernel_ops.LIF_BLOCKS["block_b"],
+                 "block_n": 128, "block_k": 128}
 
 
 def resolve_matmul_backend(backend: Optional[str] = None) -> str:
@@ -172,8 +177,11 @@ def _layer_current(spec: LayerSpec, p: PyTree, s_in: jax.Array,
 
     The binary matmul here is the accelerator's accumulate phase.  With
     ``matmul_backend="spike_gemm"`` Dense layers route through
-    ``repro.kernels`` (block-skip Pallas forward + dense-reference backward
-    via custom_vjp); the jnp path is the reference semantics.  ``perm`` is an
+    ``repro.kernels`` (block-skip Pallas forward and backward via
+    custom_vjp); the jnp path is the reference semantics.  The
+    ``"spike_gemm_fused"`` backend bypasses this function entirely for Dense
+    layers — ``step`` calls the fused GEMM+LIF kernel instead, so only jnp
+    and spike_gemm (and every Conv layer) land here.  ``perm`` is an
     optional profiled pre-synaptic permutation (``ops.firing_rate_permutation``)
     that clusters cold neurons into skippable tiles — applied as
     ``S[:, perm] @ W[perm, :]``, which leaves the product invariant.
@@ -196,6 +204,26 @@ def _layer_current(spec: LayerSpec, p: PyTree, s_in: jax.Array,
         )
         return out + p["b"]
     raise TypeError(spec)
+
+
+def _fused_dense_step(spec: Dense, p: PyTree, s_in: jax.Array,
+                      state: tuple[jax.Array, jax.Array],
+                      perm: Optional[jax.Array]
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Accumulate + bias + LIF update in one Pallas pass
+    (``matmul_backend="spike_gemm_fused"``): the kernel's epilogue applies
+    the membrane update while the accumulator tile is VMEM-resident, so the
+    (B, N) current never round-trips through HBM (DESIGN.md §12)."""
+    flat = s_in.reshape(s_in.shape[0], -1)
+    w = p["w"]
+    if perm is not None:
+        flat, w = kernel_ops.apply_permutation(flat, w, perm)
+    u_prev, s_prev = state
+    lif = spec.lif
+    return kernel_ops.spike_gemm_lif_step(
+        flat, w, p["b"], u_prev, s_prev,
+        beta=lif.beta, threshold=lif.threshold, slope=lif.slope,
+        reset_mechanism=lif.reset_mechanism, **KERNEL_BLOCKS)
 
 
 def _or_pool(s: jax.Array, window: int) -> jax.Array:
@@ -241,7 +269,12 @@ def step(cfg: SNNConfig, params: PyTree, states: list, s_in: jax.Array,
     new_states, spikes = [], []
     x = s_in
     for spec, p, st, perm in zip(cfg.layers, params, states, perms):
-        if isinstance(spec, (Dense, Conv)):
+        if isinstance(spec, Dense) and matmul_backend == "spike_gemm_fused":
+            u, s = _fused_dense_step(spec, p, x, st, perm)
+            new_states.append((u, s))
+            spikes.append(s)
+            x = s
+        elif isinstance(spec, (Dense, Conv)):
             cur = _layer_current(spec, p, x, matmul_backend, perm)
             u_prev, s_prev = st
             u, s = lif_step(u_prev, s_prev, cur, spec.lif)

@@ -5,6 +5,13 @@ time loop, rate-coded inputs, population-coded outputs, rate cross-entropy.
 After training, ``dump_traces`` extracts the spike traffic + weights that the
 Configuration Phase feeds to the accelerator model — the JAX equivalent of
 the paper's snntorch dump.
+
+Every entry point threads ``matmul_backend`` (``"jnp"`` | ``"spike_gemm"``
+| ``"spike_gemm_fused"``, DESIGN.md §11–§12) down to ``snn.apply``; the
+kernel backends run both the forward accumulate AND the BPTT cotangent
+matmuls block-skip, and the fused backend folds the LIF update into the
+accumulate epilogue.  All three are training-equivalent — same loss
+trajectory, bit-identical traces — so cached DSE cells stay backend-free.
 """
 from __future__ import annotations
 

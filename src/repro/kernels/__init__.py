@@ -5,8 +5,12 @@ ops.py (jit'd public wrappers: padding, flags, permutation), ref.py
 (pure-jnp oracles the tests sweep against).
 """
 from repro.kernels.ops import (lif_step, spike_gemm, spike_gemm_profiled,
+                               spike_gemm_train, spike_gemm_lif_step,
+                               spike_gemm_bwd_dw, spike_gemm_bwd_ds,
                                penc_compact, skip_fraction,
                                firing_rate_permutation, apply_permutation)
 
-__all__ = ["lif_step", "spike_gemm", "spike_gemm_profiled", "penc_compact",
-           "skip_fraction", "firing_rate_permutation", "apply_permutation"]
+__all__ = ["lif_step", "spike_gemm", "spike_gemm_profiled",
+           "spike_gemm_train", "spike_gemm_lif_step", "spike_gemm_bwd_dw",
+           "spike_gemm_bwd_ds", "penc_compact", "skip_fraction",
+           "firing_rate_permutation", "apply_permutation"]

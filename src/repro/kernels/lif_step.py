@@ -14,6 +14,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+#: Default standalone-LIF tile, shared by this module and the ops.py wrapper
+#: (one constant, not two hardcodings).  ``block_b`` equals the training
+#: GEMM tile's ``block_m`` (``snn.KERNEL_BLOCKS`` derives from it): both are
+#: the f32 sublane minimum of 8.  ``block_n`` is deliberately 4x the GEMM's
+#: 128-lane ``block_n``: a pure elementwise VPU pass has no MXU accumulator
+#: tile to stay aligned with, so wider tiles amortise grid overhead.  The
+#: *fused* GEMM+LIF kernel (spike_gemm_fused.py) instead inherits the GEMM's
+#: 128-lane block_n because its epilogue operates on the accumulator tile.
+LIF_BLOCKS = {"block_b": 8, "block_n": 512}
+
 
 def _lif_kernel(u_ref, s_ref, c_ref, u_out_ref, s_out_ref, *,
                 beta: float, threshold: float, reset_mechanism: str):
@@ -34,7 +44,8 @@ def _lif_kernel(u_ref, s_ref, c_ref, u_out_ref, s_out_ref, *,
 def lif_step_pallas(u_prev: jax.Array, s_prev: jax.Array, current: jax.Array,
                     *, beta: float, threshold: float,
                     reset_mechanism: str = "subtract",
-                    block_b: int = 8, block_n: int = 512,
+                    block_b: int = LIF_BLOCKS["block_b"],
+                    block_n: int = LIF_BLOCKS["block_n"],
                     interpret: bool = False) -> tuple[jax.Array, jax.Array]:
     """(B, N) fused LIF update.  Inputs must be pre-padded to block multiples
     (the ops.py wrapper handles padding/unpadding)."""

@@ -9,8 +9,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.lif_step import lif_step_pallas
+from repro.kernels.lif_step import LIF_BLOCKS, lif_step_pallas
 from repro.kernels.spike_gemm import spike_gemm_pallas
+from repro.kernels.spike_gemm_bwd import (spike_gemm_ds_pallas,
+                                          spike_gemm_dw_pallas)
+from repro.kernels.spike_gemm_fused import spike_gemm_lif_pallas
 
 
 def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
@@ -25,9 +28,14 @@ def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
                                              "block_n", "interpret"))
 def lif_step(u_prev: jax.Array, s_prev: jax.Array, current: jax.Array, *,
              beta: float, threshold: float, reset_mechanism: str = "subtract",
-             block_b: int = 8, block_n: int = 512,
+             block_b: int = LIF_BLOCKS["block_b"],
+             block_n: int = LIF_BLOCKS["block_n"],
              interpret: bool = True) -> tuple[jax.Array, jax.Array]:
-    """Fused LIF update on arbitrary (B, N); pads to tile multiples."""
+    """Fused LIF update on arbitrary (B, N); pads to tile multiples.
+
+    Default tile is ``lif_step.LIF_BLOCKS`` (shared with the kernel module;
+    see the constant's note on why it is wider than ``snn.KERNEL_BLOCKS``).
+    """
     B, N = u_prev.shape
     args = [_pad_to(a, (block_b, block_n)) for a in (u_prev, s_prev, current)]
     u, s = lif_step_pallas(*args, beta=beta, threshold=threshold,
@@ -78,14 +86,90 @@ def spike_gemm(spikes: jax.Array, weights: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
+# Block-skip backward kernels (the other two matmuls of BPTT)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def cotangent_block_flags(g: jax.Array, *, block_m: int = 128,
+                          block_n: int = 128) -> jax.Array:
+    """Any-nonzero per-tile occupancy of a SIGNED cotangent, padded to block
+    multiples — the gate of the dS backward pass.  Distinct from
+    ``block_flags``: a float tile whose entries cancel to a zero sum still
+    holds work (``ref.block_flags_any_ref``)."""
+    gp = _pad_to(g, (block_m, block_n))
+    return ref.block_flags_any_ref(gp, block_m, block_n)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def spike_gemm_bwd_dw(spikes: jax.Array, g: jax.Array, *,
+                      flags: jax.Array = None,
+                      block_m: int = 128, block_n: int = 128,
+                      block_k: int = 128, interpret: bool = True) -> jax.Array:
+    """dW[K,N] = Sᵀ·g with block-skip on the spike tiles.
+
+    ``flags``: the FORWARD's occupancy array (``block_flags`` on the same
+    spike matrix and block sizes) — a skipped (m, k) spike tile is all-zero
+    and contributes exactly zero to dW rows k, so reusing the flags makes the
+    sparse backward bit-identical to running the same kernel unskipped.
+    """
+    M, K = spikes.shape
+    _, N = g.shape
+    s = _pad_to(spikes, (block_m, block_k))
+    gp = _pad_to(g, (block_m, block_n))
+    if flags is None:
+        flags = ref.block_flags_ref(s, block_m, block_k)
+    want = (s.shape[0] // block_m, s.shape[1] // block_k)
+    if flags.shape != want:
+        raise ValueError(
+            f"flags shape {flags.shape} does not match the {want} tile grid "
+            f"of spikes {spikes.shape} at block_m={block_m}, "
+            f"block_k={block_k}")
+    dw = spike_gemm_dw_pallas(flags, s, gp, block_m=block_m, block_n=block_n,
+                              block_k=block_k, interpret=interpret)
+    return dw[:K, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def spike_gemm_bwd_ds(g: jax.Array, weights: jax.Array, *,
+                      gflags: jax.Array = None,
+                      block_m: int = 128, block_n: int = 128,
+                      block_k: int = 128, interpret: bool = True) -> jax.Array:
+    """dS[M,K] = g·Wᵀ with block-skip on the cotangent tiles.
+
+    Surrogate-gradient cotangents vanish wherever ``|u - θ|`` is large, so
+    whole (m, n) tiles of ``g`` are exactly zero late in training; ``gflags``
+    (``cotangent_block_flags``) gates the accumulate the same way the
+    forward's spike flags do.
+    """
+    M, N = g.shape
+    K, _ = weights.shape
+    gp = _pad_to(g, (block_m, block_n))
+    w = _pad_to(weights, (block_k, block_n))
+    if gflags is None:
+        gflags = ref.block_flags_any_ref(gp, block_m, block_n)
+    want = (gp.shape[0] // block_m, gp.shape[1] // block_n)
+    if gflags.shape != want:
+        raise ValueError(
+            f"gflags shape {gflags.shape} does not match the {want} tile "
+            f"grid of g {g.shape} at block_m={block_m}, block_n={block_n}")
+    ds = spike_gemm_ds_pallas(gflags, gp, w, block_m=block_m, block_n=block_n,
+                              block_k=block_k, interpret=interpret)
+    return ds[:M, :K]
+
+
+# ---------------------------------------------------------------------------
 # Differentiable spike GEMM (the training hot path)
 # ---------------------------------------------------------------------------
-# BPTT needs gradients through the accumulate phase; the Pallas kernel only
-# defines a forward.  ``spike_gemm_train`` wraps it in a ``jax.custom_vjp``:
-# block-skip forward, *dense reference* backward (the exact jnp cotangents
-# dS = g @ W^T, dW = S^T @ g) — so surrogate-gradient training through
-# ``lax.scan`` is numerically the same as the pure-jnp path while the
-# forward skips empty spike tiles.  DESIGN.md §11.
+# BPTT needs gradients through the accumulate phase.  ``spike_gemm_train``
+# wraps the Pallas kernels in a ``jax.custom_vjp``: block-skip forward AND
+# block-skip backward — dW = Sᵀ·g reuses the forward's occupancy flags
+# (saved in the VJP residuals so neither pass recomputes the reduction),
+# dS = g·Wᵀ is gated on any-nonzero cotangent-tile occupancy.  Skipping is
+# exact in both directions (an empty tile contributes exactly zero), so
+# surrogate-gradient training through ``lax.scan`` stays numerically the
+# dense reference up to fp32 tile-order rounding.  DESIGN.md §11–§12.
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _spike_gemm_train(blocks: tuple, spikes: jax.Array,
@@ -96,16 +180,23 @@ def _spike_gemm_train(blocks: tuple, spikes: jax.Array,
 
 
 def _spike_gemm_train_fwd(blocks, spikes, weights):
-    return _spike_gemm_train(blocks, spikes, weights), (spikes, weights)
+    block_m, block_n, block_k, interpret = blocks
+    flags = block_flags(spikes, block_m=block_m, block_k=block_k)
+    out = spike_gemm(spikes, weights, flags=flags, block_m=block_m,
+                     block_n=block_n, block_k=block_k, interpret=interpret)
+    return out, (spikes, weights, flags)
 
 
 def _spike_gemm_train_bwd(blocks, res, g):
-    spikes, weights = res
+    block_m, block_n, block_k, interpret = blocks
+    spikes, weights, flags = res
     g32 = g.astype(jnp.float32)
-    d_spikes = jnp.dot(g32, weights.T,
-                       preferred_element_type=jnp.float32).astype(spikes.dtype)
-    d_weights = jnp.dot(spikes.T, g32,
-                        preferred_element_type=jnp.float32).astype(weights.dtype)
+    d_spikes = spike_gemm_bwd_ds(
+        g32, weights, block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret).astype(spikes.dtype)
+    d_weights = spike_gemm_bwd_dw(
+        spikes, g32, flags=flags, block_m=block_m, block_n=block_n,
+        block_k=block_k, interpret=interpret).astype(weights.dtype)
     return d_spikes, d_weights
 
 
@@ -115,9 +206,107 @@ _spike_gemm_train.defvjp(_spike_gemm_train_fwd, _spike_gemm_train_bwd)
 def spike_gemm_train(spikes: jax.Array, weights: jax.Array, *,
                      block_m: int = 128, block_n: int = 128,
                      block_k: int = 128, interpret: bool = True) -> jax.Array:
-    """Differentiable S @ W: block-skip Pallas forward, dense jnp backward."""
+    """Differentiable S @ W: block-skip Pallas forward and backward."""
     return _spike_gemm_train((block_m, block_n, block_k, interpret),
                              spikes, weights)
+
+
+# ---------------------------------------------------------------------------
+# Fused GEMM + LIF scan step (matmul_backend="spike_gemm_fused")
+# ---------------------------------------------------------------------------
+# One Dense training step is accumulate -> +bias -> leak/threshold/reset;
+# ``spike_gemm_lif_step`` runs all of it in the fused Pallas kernel
+# (spike_gemm_fused.py) so membrane state never round-trips through HBM
+# between the matmul and the neuron update.  The custom_vjp backward applies
+# the fast-sigmoid surrogate (exactly ``lif.spike_fn``'s rule), the LIF
+# chain rule, and the two block-skip backward kernels above — the forward's
+# flags again ride the residuals.  DESIGN.md §12.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _spike_gemm_lif_train(static: tuple, spikes: jax.Array,
+                          weights: jax.Array, bias: jax.Array,
+                          u_prev: jax.Array, s_prev: jax.Array
+                          ) -> tuple[jax.Array, jax.Array]:
+    out, _ = _spike_gemm_lif_fwd_impl(static, spikes, weights, bias,
+                                      u_prev, s_prev)
+    return out
+
+
+def _spike_gemm_lif_fwd_impl(static, spikes, weights, bias, u_prev, s_prev):
+    (block_m, block_n, block_k, interpret,
+     beta, threshold, slope, reset_mechanism) = static
+    B, K = spikes.shape
+    _, N = weights.shape
+    s = _pad_to(spikes, (block_m, block_k))
+    w = _pad_to(weights, (block_k, block_n))
+    b = _pad_to(bias.reshape(1, -1), (1, block_n))
+    u0 = _pad_to(u_prev, (block_m, block_n))
+    s0 = _pad_to(s_prev, (block_m, block_n))
+    flags = ref.block_flags_ref(s, block_m, block_k)
+    u, sp = spike_gemm_lif_pallas(
+        flags, s, w, b, u0, s0, beta=beta, threshold=threshold,
+        reset_mechanism=reset_mechanism, block_m=block_m, block_n=block_n,
+        block_k=block_k, interpret=interpret)
+    return (u[:B, :N], sp[:B, :N]), flags
+
+
+def _spike_gemm_lif_train_fwd(static, spikes, weights, bias, u_prev, s_prev):
+    (u, sp), flags = _spike_gemm_lif_fwd_impl(static, spikes, weights, bias,
+                                              u_prev, s_prev)
+    return (u, sp), (spikes, weights, bias, u_prev, s_prev, u, flags)
+
+
+def _spike_gemm_lif_train_bwd(static, res, cots):
+    (block_m, block_n, block_k, interpret,
+     beta, threshold, slope, reset_mechanism) = static
+    spikes, weights, bias, u_prev, s_prev, u, flags = res
+    gu, gs = cots
+    # fast-sigmoid surrogate through s = H(u - theta), then the LIF chain
+    # rule — term for term what autodiff derives on the unfused
+    # lif.lif_step, so fused and unfused cotangents agree.
+    v = u - threshold
+    surr = 1.0 / jnp.square(1.0 + slope * jnp.abs(v))
+    g = gu + gs * surr
+    if reset_mechanism == "subtract":
+        d_u_prev = beta * g
+        d_s_prev = -threshold * g
+    else:
+        d_u_prev = beta * (1.0 - s_prev) * g
+        d_s_prev = -(beta * u_prev) * g
+    g32 = g.astype(jnp.float32)
+    d_bias = g32.sum(0).astype(bias.dtype)
+    d_spikes = spike_gemm_bwd_ds(
+        g32, weights, block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret).astype(spikes.dtype)
+    d_weights = spike_gemm_bwd_dw(
+        spikes, g32, flags=flags, block_m=block_m, block_n=block_n,
+        block_k=block_k, interpret=interpret).astype(weights.dtype)
+    return d_spikes, d_weights, d_bias, d_u_prev.astype(u_prev.dtype), \
+        d_s_prev.astype(s_prev.dtype)
+
+
+_spike_gemm_lif_train.defvjp(_spike_gemm_lif_train_fwd,
+                             _spike_gemm_lif_train_bwd)
+
+
+def spike_gemm_lif_step(spikes: jax.Array, weights: jax.Array,
+                        bias: jax.Array, u_prev: jax.Array,
+                        s_prev: jax.Array, *, beta: float, threshold: float,
+                        slope: float = 25.0,
+                        reset_mechanism: str = "subtract",
+                        block_m: int = 8, block_n: int = 128,
+                        block_k: int = 128, interpret: bool = True
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Differentiable fused scan step: (u, s) = LIF(u, s, S @ W + b).
+
+    Bit-identical forward to ``spike_gemm_train(S, W) + b`` composed with
+    ``lif.lif_step`` (same accumulate order, same epilogue expression);
+    surrogate-gradient backward through the block-skip kernels.
+    """
+    return _spike_gemm_lif_train(
+        (block_m, block_n, block_k, interpret,
+         float(beta), float(threshold), float(slope), reset_mechanism),
+        spikes, weights, bias, u_prev, s_prev)
 
 
 @functools.partial(jax.jit, static_argnames=("capacity", "block_b",
@@ -145,9 +334,10 @@ def skip_fraction(spikes: jax.Array, block_m: int = 128,
     the sparsity-aware design on given traffic.
 
     Jitted (pad + tile-reduce fuse and the trace is cached per shape), so
-    calling it on the benchmark hot loop costs one compiled reduction, not
-    an eager re-pad per call; pair with ``block_flags`` + ``spike_gemm(...,
-    flags=...)`` to reuse the same occupancy for the matmul itself."""
+    calling it on the benchmarks/bench_kernels.py hot loop costs one
+    compiled reduction, not an eager re-pad per call; pair with
+    ``block_flags`` + ``spike_gemm(..., flags=...)`` to reuse the same
+    occupancy for the matmul itself."""
     # clamp: fp rounding of the mean can land a hair past 1.0
     return max(0.0, float(_skip_fraction(spikes, block_m=block_m,
                                          block_k=block_k)))

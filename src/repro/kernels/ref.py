@@ -53,8 +53,43 @@ def penc_compact_ref(spikes: jax.Array, capacity: int
 
 def block_flags_ref(spikes: jax.Array, bm: int, bk: int) -> jax.Array:
     """Per (row-block, k-block) spike occupancy — the TPU-granular analogue
-    of the paper's PENC compression (DESIGN.md §2)."""
+    of the paper's PENC compression (DESIGN.md §2).  The sum>0 test is exact
+    only for nonnegative inputs (spikes are binary); for signed cotangents
+    use ``block_flags_any_ref``."""
     M, K = spikes.shape
     assert M % bm == 0 and K % bk == 0
     blocks = spikes.reshape(M // bm, bm, K // bk, bk)
     return (blocks.sum(axis=(1, 3)) > 0).astype(jnp.int32)
+
+
+def block_flags_any_ref(x: jax.Array, bm: int, bk: int) -> jax.Array:
+    """Any-nonzero per-tile occupancy for SIGNED operands (the backward's
+    surrogate-gradient cotangents): a float tile whose entries cancel to a
+    zero sum still holds work and must not be skipped (DESIGN.md §12)."""
+    M, K = x.shape
+    assert M % bm == 0 and K % bk == 0
+    blocks = (x != 0).reshape(M // bm, bm, K // bk, bk)
+    return blocks.any(axis=(1, 3)).astype(jnp.int32)
+
+
+def spike_gemm_bwd_ref(spikes: jax.Array, weights: jax.Array, g: jax.Array
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Dense reference cotangents of ``out = S @ W``: the exact jnp
+    ``dS = g·Wᵀ`` and ``dW = Sᵀ·g`` in fp32 (what the block-skip backward
+    kernels must reproduce — a skipped tile contributes exactly zero)."""
+    g32 = g.astype(jnp.float32)
+    ds = jnp.dot(g32, weights.T, preferred_element_type=jnp.float32)
+    dw = jnp.dot(spikes.T, g32, preferred_element_type=jnp.float32)
+    return ds, dw
+
+
+def spike_gemm_lif_ref(spikes: jax.Array, weights: jax.Array,
+                       bias: jax.Array, u_prev: jax.Array, s_prev: jax.Array,
+                       *, beta: float, threshold: float,
+                       reset_mechanism: str = "subtract"
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the fused GEMM+LIF scan step: the unfused composition
+    ``lif_step_ref(u, s, S @ W + b)``."""
+    cur = spike_gemm_ref(spikes, weights).astype(u_prev.dtype) + bias
+    return lif_step_ref(u_prev, s_prev, cur, beta=beta, threshold=threshold,
+                        reset_mechanism=reset_mechanism)

@@ -15,8 +15,9 @@ skip granularity becomes a (block_m x block_k) tile of the spike matrix:
 
 With the layerwise firing ratios the paper reports (3-30% of neurons,
 Fig. 1), most K-tiles of a deep layer are empty and the skip rate is large;
-benchmarks/kernels.py reports measured skip fractions on trained-model
-traffic.  DESIGN.md §2 records this hardware adaptation.
+benchmarks/bench_kernels.py reports measured skip fractions on trained-model
+traffic.  DESIGN.md §2 records this hardware adaptation; the backward-pass
+kernels that reuse these flags live in spike_gemm_bwd.py (DESIGN.md §12).
 """
 from __future__ import annotations
 

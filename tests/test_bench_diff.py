@@ -53,20 +53,35 @@ def test_improvements_and_info_fields_not_flagged(tmp_path):
 
 def test_suffix_matched_directions(tmp_path):
     """The BPTT kernel benchmark's fields are tracked by suffix:
-    ``*_step_seconds`` regresses on growth, ``speedup`` on drop, and
-    ``skip_fraction`` stays informational."""
+    ``*_fwd_seconds`` / ``*_bwd_seconds`` / ``*_step_seconds`` regress on
+    growth, ``speedup`` / ``fused_speedup`` on drop, ``skip_fraction`` /
+    ``bwd_skip_fraction`` on drop (fewer tiles skipped = the sparsity-aware
+    design buys less), and ``skip_fraction_profiled`` stays informational
+    (its suffix is "_profiled")."""
     old = tmp_path / "old.json"
     new = tmp_path / "new.json"
     _write(old, [{"name": "kernels/bptt/mnist-mlp/T4/p1",
                   "jnp_step_seconds": 1.0, "spike_gemm_step_seconds": 2.0,
-                  "speedup": 0.5, "skip_fraction": 0.4}])
+                  "spike_gemm_bwd_seconds": 1.0,
+                  "spike_gemm_fused_fwd_seconds": 1.0,
+                  "speedup": 0.5, "fused_speedup": 0.5,
+                  "skip_fraction": 0.4, "bwd_skip_fraction": 0.4,
+                  "skip_fraction_profiled": 0.8}])
     _write(new, [{"name": "kernels/bptt/mnist-mlp/T4/p1",
                   "jnp_step_seconds": 1.0, "spike_gemm_step_seconds": 3.0,
-                  "speedup": 0.33, "skip_fraction": 0.1}])
+                  "spike_gemm_bwd_seconds": 2.0,
+                  "spike_gemm_fused_fwd_seconds": 2.0,
+                  "speedup": 0.33, "fused_speedup": 0.33,
+                  "skip_fraction": 0.1, "bwd_skip_fraction": 0.1,
+                  "skip_fraction_profiled": 0.2}])
     d = json.loads(_run(str(old), str(new), "--json").stdout)
     flagged = {r["field"] for r in d["regressions"]}
-    assert flagged == {"spike_gemm_step_seconds", "speedup"}
-    info = [c for c in d["changes"] if c["field"] == "skip_fraction"]
+    assert flagged == {"spike_gemm_step_seconds", "spike_gemm_bwd_seconds",
+                       "spike_gemm_fused_fwd_seconds", "speedup",
+                       "fused_speedup", "skip_fraction",
+                       "bwd_skip_fraction"}
+    info = [c for c in d["changes"]
+            if c["field"] == "skip_fraction_profiled"]
     assert info and info[0]["direction"] == "info"
 
 

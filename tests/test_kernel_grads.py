@@ -1,13 +1,15 @@
 """Gradient-parity harness for the spike_gemm training path.
 
-The kernel route (``ops.spike_gemm_train``: block-skip Pallas forward,
-dense-reference backward via custom_vjp) must be a drop-in replacement for
-the pure-jnp matmul on the BPTT hot path: same forward values, same
-cotangents, through surrogate gradients and ``lax.scan``.  These tests lock
-that contract down at three levels — the custom_vjp itself
-(``jax.test_util.check_grads``), single-gemm loss gradients across
-non-tile-multiple shapes and degenerate spike trains, and full SNN loss
-gradients under both LIF reset mechanisms.
+The kernel routes (``ops.spike_gemm_train``: block-skip Pallas forward AND
+backward via custom_vjp; ``ops.spike_gemm_lif_step``: the fused GEMM+LIF
+scan-step kernel) must be drop-in replacements for the pure-jnp matmul on
+the BPTT hot path: same forward values, same cotangents, through surrogate
+gradients and ``lax.scan``.  These tests lock that contract down at four
+levels — the custom_vjps themselves (``jax.test_util.check_grads``),
+bit-for-bit skip-exactness of the sparse backward on grid-quantized
+operands, single-gemm loss gradients across non-tile-multiple shapes and
+degenerate spike trains, and full SNN loss gradients under both LIF reset
+mechanisms for every backend in ``snn.MATMUL_BACKENDS``.
 """
 import jax
 import jax.numpy as jnp
@@ -70,7 +72,7 @@ class TestCustomVJP:
         _assert_tree_allclose(ga, gb, atol=1e-4, rtol=1e-4)
 
     def test_zero_train_zero_weight_grad(self):
-        """An all-zero train skips every tile, yet the backward still
+        """An all-zero train skips every dW tile, yet the backward still
         produces the exact dense cotangents (dW = S^T g = 0, dS = g W^T)."""
         s = jnp.zeros((16, 256), jnp.float32)
         w = jax.random.normal(jax.random.key(0), (256, 64))
@@ -98,6 +100,138 @@ class TestCustomVJP:
                                    atol=1e-6)
 
 
+class TestSparseBackwardExactness:
+    """Skipping is EXACT, not approximate: a skipped tile is all-zero and
+    contributes exactly zero to the cotangent accumulate (DESIGN.md §12)."""
+
+    @pytest.mark.parametrize("shape", [(32, 100, 10), (8, 784, 128),
+                                       (5, 64, 3), (24, 333, 96)])
+    @pytest.mark.parametrize("density", [0.0, 0.15, 1.0])
+    def test_bwd_bitexact_vs_dense_on_grid(self, shape, density):
+        """Block-skip dW/dS equal the dense jnp cotangents BIT-FOR-BIT
+        across non-tile-multiple shapes.  Operands on a 1/256 grid make
+        every accumulate an exact fp32 sum (the idiom of
+        test_kernels.test_profiled_permutation_exact_equality), so
+        summation order is irrelevant and any deviation could only come
+        from a wrongly-skipped tile."""
+        M, K, N = shape
+        rng = np.random.default_rng(M + N)
+        s = _spikes((M, K), density, seed=M)
+        w = jnp.asarray(rng.integers(-64, 64, (K, N)) / 256.0,
+                        dtype=jnp.float32)
+        g = jnp.asarray(rng.integers(-64, 64, (M, N)) / 256.0,
+                        dtype=jnp.float32)
+        _, vjp = jax.vjp(
+            lambda s, w: ops.spike_gemm_train(s, w, block_m=8), s, w)
+        ds, dw = vjp(g)
+        np.testing.assert_array_equal(np.asarray(dw),
+                                      np.asarray(jnp.dot(s.T, g)))
+        np.testing.assert_array_equal(np.asarray(ds),
+                                      np.asarray(jnp.dot(g, w.T)))
+
+    def test_flags_ride_the_residuals(self):
+        """The forward's occupancy reduction happens once: the flags saved
+        by the VJP forward are exactly ``ops.block_flags`` of the spike
+        matrix, and the backward consumes them as-is."""
+        s = _spikes((16, 300), 0.05, seed=2)
+        w = jax.random.normal(jax.random.key(3), (300, 40)) * 0.1
+        _, res = ops._spike_gemm_train_fwd((8, 128, 128, True), s, w)
+        saved_s, saved_w, saved_flags = res
+        np.testing.assert_array_equal(
+            np.asarray(saved_flags),
+            np.asarray(ops.block_flags(s, block_m=8, block_k=128)))
+
+
+class TestFusedKernelGrads:
+    """ops.spike_gemm_lif_step: the fused GEMM+LIF scan step must carry the
+    exact gradient contract of the unfused composition
+    (spike_gemm_train + bias + lif.lif_step)."""
+
+    def _inputs(self, seed=0, M=16, K=40, N=12):
+        keys = jax.random.split(jax.random.key(seed), 4)
+        s = _spikes((M, K), 0.5, seed=seed + 1)
+        w = jax.random.normal(keys[0], (K, N)) * 0.1
+        b = jax.random.normal(keys[1], (N,)) * 0.1
+        u0 = jax.random.normal(keys[2], (M, N)) * 0.5
+        s0 = _spikes((M, N), 0.3, seed=seed + 2)
+        return s, w, b, u0, s0
+
+    def test_check_grads_membrane_path(self):
+        """check_grads (rev) through the fused kernel's membrane output —
+        u is linear in (w, b, u_prev), so the numeric check is exact-ish.
+        The spike output is a Heaviside whose surrogate gradient is
+        deliberately NOT the numerical derivative (that is the point of
+        surrogate training); its path is locked by the parity tests."""
+        s, w, b, u0, s0 = self._inputs()
+
+        def membrane(w, b, u0):
+            u, _ = ops.spike_gemm_lif_step(s, w, b, u0, s0,
+                                           beta=0.9, threshold=1.0)
+            return u
+
+        check_grads(membrane, (w, b, u0), order=1, modes=["rev"],
+                    atol=1e-2, rtol=1e-2)
+
+    @pytest.mark.parametrize("reset", ["subtract", "zero"])
+    def test_fused_vjp_matches_unfused(self, reset):
+        """Full (gu, gs) cotangents through the fused custom_vjp equal the
+        unfused composition's — including the fast-sigmoid surrogate on the
+        spike output and the LIF chain rule on both reset mechanisms."""
+        from repro.core.lif import LIFParams, lif_step as core_lif
+        s, w, b, u0, s0 = self._inputs(seed=4)
+        lif = LIFParams(beta=0.9, threshold=1.0, reset_mechanism=reset)
+        kb = dict(block_m=8, block_n=128, block_k=128)
+
+        def fused(w, b, u0, s0):
+            return ops.spike_gemm_lif_step(
+                s, w, b, u0, s0, beta=lif.beta, threshold=lif.threshold,
+                slope=lif.slope, reset_mechanism=reset, **kb)
+
+        def unfused(w, b, u0, s0):
+            cur = ops.spike_gemm_train(s, w, **kb) + b
+            return core_lif(u0, s0, cur, lif)
+
+        gu = jax.random.normal(jax.random.key(10), u0.shape)
+        gs = jax.random.normal(jax.random.key(11), u0.shape)
+        outs_f, vjp_f = jax.vjp(fused, w, b, u0, s0)
+        outs_u, vjp_u = jax.vjp(unfused, w, b, u0, s0)
+        # identical spikes; membrane equal to fp rounding (the fused
+        # epilogue and XLA's fused elementwise may associate differently)
+        np.testing.assert_array_equal(np.asarray(outs_f[1]),
+                                      np.asarray(outs_u[1]))
+        np.testing.assert_allclose(np.asarray(outs_f[0]),
+                                   np.asarray(outs_u[0]), atol=1e-6)
+        _assert_tree_allclose(vjp_f((gu, gs)), vjp_u((gu, gs)),
+                              atol=1e-4, rtol=1e-4)
+
+    @pytest.mark.parametrize("reset", ["subtract", "zero"])
+    def test_fused_dw_bitexact_on_grid(self, reset):
+        """The fused backward's dW is bit-for-bit the dense cotangent on
+        grid-quantized operands, under both reset mechanisms — the skipped
+        spike tiles contribute exactly zero through the fused path too."""
+        rng = np.random.default_rng(7)
+        M, K, N = 24, 300, 20
+        s = _spikes((M, K), 0.1, seed=9)
+        w = jnp.asarray(rng.integers(-64, 64, (K, N)) / 256.0,
+                        dtype=jnp.float32)
+        b = jnp.zeros((N,), jnp.float32)
+        u0 = jnp.zeros((M, N), jnp.float32)
+        s0 = jnp.zeros((M, N), jnp.float32)
+        gu = jnp.asarray(rng.integers(-64, 64, (M, N)) / 256.0,
+                         dtype=jnp.float32)
+
+        def fused(w):
+            return ops.spike_gemm_lif_step(
+                s, w, b, u0, s0, beta=0.9, threshold=1.0,
+                reset_mechanism=reset, block_m=8)
+
+        _, vjp = jax.vjp(fused, w)
+        # gs = 0 keeps the surrogate factor out so g stays on the grid
+        (dw,) = vjp((gu, jnp.zeros_like(gu)))
+        np.testing.assert_array_equal(np.asarray(dw),
+                                      np.asarray(jnp.dot(s.T, gu)))
+
+
 class TestLossGradParity:
     """Full surrogate-gradient BPTT through lax.scan, both backends."""
 
@@ -122,10 +256,11 @@ class TestLossGradParity:
             vals[backend], grads[backend] = jax.value_and_grad(
                 lambda p: train_snn.loss_fn(cfg, p, key, x, y,
                                             matmul_backend=backend))(params)
-        np.testing.assert_allclose(float(vals["jnp"]),
-                                   float(vals["spike_gemm"]), rtol=1e-6)
-        _assert_tree_allclose(grads["jnp"], grads["spike_gemm"],
-                              atol=1e-5, rtol=1e-5)
+        for backend in snn.MATMUL_BACKENDS[1:]:
+            np.testing.assert_allclose(float(vals["jnp"]),
+                                       float(vals[backend]), rtol=1e-6)
+            _assert_tree_allclose(grads["jnp"], grads[backend],
+                                  atol=1e-5, rtol=1e-5)
 
     @pytest.mark.parametrize("density", [0.0, 1.0])
     def test_degenerate_input_trains(self, density):
@@ -141,9 +276,10 @@ class TestLossGradParity:
             return encoding.rate_loss(out, y, cfg.num_classes)
 
         va, ga = jax.value_and_grad(loss)(params, "jnp")
-        vb, gb = jax.value_and_grad(loss)(params, "spike_gemm")
-        np.testing.assert_allclose(float(va), float(vb), rtol=1e-6)
-        _assert_tree_allclose(ga, gb, atol=1e-6, rtol=1e-6)
+        for backend in snn.MATMUL_BACKENDS[1:]:
+            vb, gb = jax.value_and_grad(loss)(params, backend)
+            np.testing.assert_allclose(float(va), float(vb), rtol=1e-6)
+            _assert_tree_allclose(ga, gb, atol=1e-6, rtol=1e-6)
 
     def test_forward_values_match(self):
         """Spike-for-spike identical forward trains (binary outputs make
@@ -155,8 +291,9 @@ class TestLossGradParity:
         spikes_in = encoding.rate_encode(jax.random.key(9), x, cfg.num_steps)
         out_j = snn.apply(cfg, params, spikes_in, matmul_backend="jnp",
                           return_all_layers=True)
-        out_k = snn.apply(cfg, params, spikes_in,
-                          matmul_backend="spike_gemm",
-                          return_all_layers=True)
-        for a, b in zip(out_j, out_k):
-            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for backend in snn.MATMUL_BACKENDS[1:]:
+            out_k = snn.apply(cfg, params, spikes_in,
+                              matmul_backend=backend,
+                              return_all_layers=True)
+            for a, b in zip(out_j, out_k):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

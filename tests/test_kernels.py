@@ -136,6 +136,134 @@ class TestSpikeGemm:
                                                                (32, 8))))
 
 
+class TestSpikeGemmBwdKernels:
+    """Block-skip backward kernels (spike_gemm_bwd.py) vs the dense
+    oracles: dW = Sᵀ·g on the forward's flags, dS = g·Wᵀ on any-nonzero
+    cotangent occupancy."""
+
+    @pytest.mark.parametrize("shape", [(128, 128, 128), (100, 333, 77),
+                                       (8, 1024, 64), (1, 784, 500)])
+    @pytest.mark.parametrize("density", [0.0, 0.05, 0.5])
+    def test_dw_matches_dense_ref(self, shape, density):
+        M, K, N = shape
+        k1, k2 = jax.random.split(jax.random.key(13))
+        s = (jax.random.uniform(k1, (M, K)) < density).astype(jnp.float32)
+        g = jax.random.normal(k2, (M, N), jnp.float32)
+        got = ops.spike_gemm_bwd_dw(s, g, block_m=8)
+        _, want = ref.spike_gemm_bwd_ref(s, jnp.zeros((K, N)), g)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4, rtol=1e-4)
+
+    @pytest.mark.parametrize("shape", [(128, 128, 128), (100, 333, 77),
+                                       (8, 1024, 64)])
+    def test_ds_matches_dense_ref(self, shape):
+        M, K, N = shape
+        k1, k2 = jax.random.split(jax.random.key(14))
+        g = jax.random.normal(k1, (M, N), jnp.float32)
+        w = jax.random.normal(k2, (K, N), jnp.float32) * 0.1
+        got = ops.spike_gemm_bwd_ds(g, w, block_m=8)
+        want, _ = ref.spike_gemm_bwd_ref(jnp.zeros((M, K)), w, g)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_dw_skip_vs_dense_flags_bitident(self):
+        """Property behind the sparse backward: running the dW kernel with
+        the real (skipping) flags is bit-identical to running it with every
+        flag forced on — a skipped tile contributes exactly zero."""
+        k1, k2 = jax.random.split(jax.random.key(15))
+        s = (jax.random.uniform(k1, (40, 700)) < 0.2).astype(jnp.float32)
+        s = s.at[8:24, :].set(0.0).at[:, 256:512].set(0.0)
+        g = jax.random.normal(k2, (40, 60), jnp.float32)
+        flags = ops.block_flags(s, block_m=8, block_k=128)
+        assert float(flags.mean()) < 1.0          # something is skipped
+        a = ops.spike_gemm_bwd_dw(s, g, flags=flags, block_m=8)
+        b = ops.spike_gemm_bwd_dw(s, g, flags=jnp.ones_like(flags),
+                                  block_m=8)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_ds_skip_vs_dense_flags_bitident(self):
+        """Same property on the dS side, gated on cotangent occupancy:
+        zero out whole (8, 128) tiles of g and the gated kernel matches the
+        all-flags-on kernel bit-for-bit."""
+        k1, k2 = jax.random.split(jax.random.key(16))
+        g = jax.random.normal(k1, (24, 256), jnp.float32)
+        g = g.at[8:16, :].set(0.0).at[:, 128:].set(0.0)
+        w = jax.random.normal(k2, (300, 256), jnp.float32) * 0.1
+        gflags = ops.cotangent_block_flags(g, block_m=8, block_n=128)
+        assert float(gflags.mean()) < 1.0
+        a = ops.spike_gemm_bwd_ds(g, w, gflags=gflags, block_m=8)
+        b = ops.spike_gemm_bwd_ds(g, w, gflags=jnp.ones_like(gflags),
+                                  block_m=8)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_cancelling_cotangent_tile_not_skipped(self):
+        """A signed tile whose entries sum to zero still holds work: the
+        sum>0 spike-flag reduction would wrongly skip it, the any-nonzero
+        cotangent reduction must not (and dS must stay exact)."""
+        g = jnp.zeros((8, 256), jnp.float32)
+        g = g.at[0, 0].set(1.0).at[1, 1].set(-1.0)   # tile sums to zero
+        w = jnp.asarray(np.random.default_rng(0).normal(size=(64, 256)),
+                        dtype=jnp.float32)
+        spike_style = np.asarray(ref.block_flags_ref(g, 8, 128))
+        any_style = np.asarray(ref.block_flags_any_ref(g, 8, 128))
+        assert spike_style[0, 0] == 0 and any_style[0, 0] == 1
+        got = ops.spike_gemm_bwd_ds(g, w, block_m=8)
+        want, _ = ref.spike_gemm_bwd_ref(jnp.zeros((8, 64)), w, g)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)
+
+    def test_all_zero_cotangent_skips_everything(self):
+        g = jnp.zeros((16, 128), jnp.float32)
+        w = jnp.ones((256, 128), jnp.float32)
+        out = ops.spike_gemm_bwd_ds(g, w, block_m=8)
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+        assert float(ops.cotangent_block_flags(g, block_m=8,
+                                               block_n=128).sum()) == 0.0
+
+
+class TestFusedGemmLifKernel:
+    """spike_gemm_fused.py forward vs the composed oracle."""
+
+    @pytest.mark.parametrize("shape", [(8, 128, 128), (16, 300, 50),
+                                       (5, 100, 33), (1, 784, 500)])
+    @pytest.mark.parametrize("reset", ["subtract", "zero"])
+    def test_matches_composed_ref(self, shape, reset):
+        M, K, N = shape
+        keys = jax.random.split(jax.random.key(21), 5)
+        s = (jax.random.uniform(keys[0], (M, K)) < 0.2).astype(jnp.float32)
+        w = jax.random.normal(keys[1], (K, N)) * 0.1
+        b = jax.random.normal(keys[2], (N,)) * 0.1
+        u0 = jax.random.normal(keys[3], (M, N))
+        s0 = (jax.random.uniform(keys[4], (M, N)) < 0.3).astype(jnp.float32)
+        got_u, got_s = ops.spike_gemm_lif_step(
+            s, w, b, u0, s0, beta=0.9, threshold=1.0,
+            reset_mechanism=reset, block_m=8)
+        want_u, want_s = ref.spike_gemm_lif_ref(
+            s, w, b, u0, s0, beta=0.9, threshold=1.0,
+            reset_mechanism=reset)
+        np.testing.assert_allclose(np.asarray(got_u), np.asarray(want_u),
+                                   atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+
+    def test_all_zero_train_is_pure_lif(self):
+        """Every spike tile skipped: the accumulate contributes nothing and
+        the epilogue reduces to the bare LIF update on the bias current."""
+        M, K, N = 8, 256, 64
+        s = jnp.zeros((M, K), jnp.float32)
+        w = jax.random.normal(jax.random.key(0), (K, N))
+        b = jnp.full((N,), 0.3, jnp.float32)
+        u0 = jax.random.normal(jax.random.key(1), (M, N))
+        s0 = jnp.zeros((M, N), jnp.float32)
+        got_u, got_s = ops.spike_gemm_lif_step(s, w, b, u0, s0,
+                                               beta=0.9, threshold=1.0,
+                                               block_m=8)
+        want_u, want_s = ref.lif_step_ref(
+            u0, s0, jnp.broadcast_to(b, (M, N)), beta=0.9, threshold=1.0)
+        np.testing.assert_allclose(np.asarray(got_u), np.asarray(want_u),
+                                   atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+
+
 class TestKernelPlumbing:
     """Property/edge tests for the wrapper layer the training path rides:
     padding, occupancy flags, skip_fraction caching, PENC edges, and the

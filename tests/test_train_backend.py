@@ -38,13 +38,14 @@ class TestTrainingParity:
                 cfg, small_data, steps=20, batch_size=32, seed=11,
                 matmul_backend=backend)
         l_jnp = np.asarray(runs["jnp"].train_loss)
-        l_ker = np.asarray(runs["spike_gemm"].train_loss)
-        np.testing.assert_allclose(l_jnp, l_ker, atol=1e-3, rtol=1e-3)
-        assert abs(runs["jnp"].test_accuracy
-                   - runs["spike_gemm"].test_accuracy) <= 0.05
+        for backend in snn.MATMUL_BACKENDS[1:]:
+            l_ker = np.asarray(runs[backend].train_loss)
+            np.testing.assert_allclose(l_jnp, l_ker, atol=1e-3, rtol=1e-3)
+            assert abs(runs["jnp"].test_accuracy
+                       - runs[backend].test_accuracy) <= 0.05
 
     def test_traces_backend_invariant(self, small_data):
-        """Same params => bit-identical dump_traces/trace_counts under both
+        """Same params => bit-identical dump_traces/trace_counts under all
         backends (the property that makes cached cells backend-free)."""
         cfg = _small_cfg()
         res = train_snn.train(cfg, small_data, steps=10, batch_size=32,
@@ -57,11 +58,12 @@ class TestTrainingParity:
             counts[backend] = train_snn.trace_counts(
                 cfg, res.params, small_data.x_test, max_samples=32,
                 matmul_backend=backend)
-        for a, b in zip(traces["jnp"]["layer_input_spike_counts"],
-                        traces["spike_gemm"]["layer_input_spike_counts"]):
-            np.testing.assert_array_equal(a, b)
-        for a, b in zip(counts["jnp"], counts["spike_gemm"]):
-            np.testing.assert_array_equal(a, b)
+        for backend in snn.MATMUL_BACKENDS[1:]:
+            for a, b in zip(traces["jnp"]["layer_input_spike_counts"],
+                            traces[backend]["layer_input_spike_counts"]):
+                np.testing.assert_array_equal(a, b)
+            for a, b in zip(counts["jnp"], counts[backend]):
+                np.testing.assert_array_equal(a, b)
 
     def test_evaluate_backend_invariant(self, small_data):
         cfg = _small_cfg()
@@ -69,10 +71,11 @@ class TestTrainingParity:
                               seed=3)
         acc_j = train_snn.evaluate(cfg, res.params, small_data.x_test,
                                    small_data.y_test, matmul_backend="jnp")
-        acc_k = train_snn.evaluate(cfg, res.params, small_data.x_test,
-                                   small_data.y_test,
-                                   matmul_backend="spike_gemm")
-        assert acc_j == acc_k
+        for backend in snn.MATMUL_BACKENDS[1:]:
+            acc_k = train_snn.evaluate(cfg, res.params, small_data.x_test,
+                                       small_data.y_test,
+                                       matmul_backend=backend)
+            assert acc_j == acc_k
 
 
 class TestBackendResolution:

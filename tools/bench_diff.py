@@ -25,10 +25,14 @@ import argparse
 import json
 import sys
 
-#: field-name suffixes where LARGER is better (regression = drop)
-HIGHER_IS_BETTER = ("_per_sec", "speedup")
+#: field-name suffixes where LARGER is better (regression = drop) —
+#: "skip_fraction" covers the kernels suite's ``skip_fraction`` and
+#: ``bwd_skip_fraction`` (tiles the sparsity-aware fwd/bwd kernels skip);
+#: ``skip_fraction_profiled`` ends in "_profiled" and stays informational.
+HIGHER_IS_BETTER = ("_per_sec", "speedup", "skip_fraction")
 #: field-name suffixes where SMALLER is better (regression = growth) —
-#: covers "seconds", "repeat_seconds", "jnp_step_seconds", "rss_mb", ...
+#: covers "seconds" ("repeat_seconds", per-backend "*_fwd_seconds" /
+#: "*_bwd_seconds" / "*_step_seconds"), "rss_mb", ...
 LOWER_IS_BETTER = ("seconds", "_mb")
 
 
