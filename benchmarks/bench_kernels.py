@@ -11,7 +11,10 @@ custom_vjp), and the fused GEMM+LIF scan-step kernel — across the built-in
 workloads' T x population grid, emitting one JSON line per cell in the
 ``BENCH_*.json`` schema (``*_fwd_seconds`` / ``*_bwd_seconds`` /
 ``*_step_seconds`` per backend, ``skip_fraction`` / ``bwd_skip_fraction``)
-so ``tools/bench_diff.py`` tracks the training hot path across runs.
+so ``tools/bench_diff.py`` tracks the training hot path across runs.  Conv
+workloads (dvs-conv) are first-class cells: their Conv layers route through
+the patch-tiled block-skip kernel and their skip fractions are measured on
+the im2col patch matrices the kernel actually tiles.
 
 Wall-clock here is CPU-interpret (no TPU) — the hardware-independent figure
 of merit is the SKIP FRACTION.
@@ -72,11 +75,15 @@ def _micro(quick: bool) -> None:
         emit(f"kernels/lif_step/{shape[0]}x{shape[1]}", us, "interpret-mode")
 
 
-def _dense_skip_fractions(cfg: snn.SNNConfig, params, spikes_in
+def _layer_skip_fractions(cfg: snn.SNNConfig, params, spikes_in
                           ) -> tuple[float, float]:
-    """Mean (base, profile-permuted) tile-skip fraction over the Dense
-    layers' input traffic — the tiles the kernel path actually skips.
-    ``layer_input_trains`` yields exactly one train per spiking layer."""
+    """Mean (base, profile-permuted) tile-skip fraction over every spiking
+    layer's input traffic — the tiles the kernel path actually skips.
+    Dense layers measure the flattened train; Conv layers measure the
+    im2col PATCH matrix their block-skip kernel tiles (spike_conv.py).
+    The profiled permutation is Dense-only, so conv layers contribute their
+    base skip to the profiled mean.  ``layer_input_trains`` yields exactly
+    one train per spiking layer."""
     trains = snn.layer_input_trains(cfg, params, spikes_in)
     bm, bk = snn.KERNEL_BLOCKS["block_m"], snn.KERNEL_BLOCKS["block_k"]
     base, perm = [], []
@@ -86,6 +93,14 @@ def _dense_skip_fractions(cfg: snn.SNNConfig, params, spikes_in
             base.append(ops.skip_fraction(flat, bm, bk))
             p = train_snn.train_firing_permutation(train)
             perm.append(ops.skip_fraction(flat[:, p], bm, bk))
+        elif isinstance(spec, snn.Conv):
+            t, b = train.shape[:2]
+            patches = ops.conv_patches(
+                train.reshape((t * b,) + train.shape[2:]),
+                spec.kernel, spec.kernel, spec.stride, spec.padding)
+            frac = ops.skip_fraction(patches, bm, bk)
+            base.append(frac)
+            perm.append(frac)
     return float(np.mean(base)), float(np.mean(perm))
 
 
@@ -123,7 +138,7 @@ def _bptt_cell(wl: registry.Workload, T: int, pop: float) -> None:
 
     spikes_in = train_snn._encode_input(
         jax.random.key(1), jnp.asarray(data.x_test[:32]), T)
-    skip, skip_profiled = _dense_skip_fractions(cfg, res.params, spikes_in)
+    skip, skip_profiled = _layer_skip_fractions(cfg, res.params, spikes_in)
     emit_json(f"kernels/bptt/{wl.name}/T{T}/p{pop:g}",
               speedup=round(step_seconds["jnp"]
                             / max(step_seconds["spike_gemm"], 1e-12), 4),
@@ -142,11 +157,22 @@ def _bptt_cell(wl: registry.Workload, T: int, pop: float) -> None:
 
 
 def _bptt(quick: bool) -> None:
-    names = ["mnist-mlp"] if quick else registry.names()
+    # conv cells ride the same grid now that Conv routes through the
+    # patch-tiled kernel; quick mode keeps one shrunk dvs-conv cell in CI
+    names = ["mnist-mlp", "dvs-conv"] if quick else registry.names()
     for name in names:
         wl = dataclasses.replace(
             registry.get(name),
             n_train=256, n_test=64, train_steps=20 if quick else 60)
+        if any(isinstance(l, snn.Conv) for l in wl.layers):
+            # interpret-mode Pallas executes the B·OH·OW patch grid
+            # serially — shrink the retina/batch so conv cells stay
+            # benchmarkable on CPU (skip fractions are size-honest either
+            # way; wall-clock is CPU-interpret for every cell)
+            wl = dataclasses.replace(
+                wl, input_shape=(8, 8, 2), batch_size=16, n_train=128,
+                num_steps_choices=(2,) if quick else (4, 8),
+                population_choices=(1.0,) if quick else (1.0, 2.0))
         Ts = wl.num_steps_choices[:2] if quick else wl.num_steps_choices
         pops = wl.population_choices[:2] if quick else wl.population_choices
         for T in Ts:

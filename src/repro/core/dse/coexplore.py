@@ -17,10 +17,11 @@ numerics on a fixed cell are identical by construction (tested).
 Accuracy joins cycles/LUT/BRAM/energy as a first-class Pareto objective:
 every candidate row carries ``accuracy`` and ``error`` (= 1 - accuracy)
 columns, and ``error`` is minimized in the shared k-objective accumulator.
-When the hardware subspace has a ``weight_bits`` axis and the workload is a
-rate-encoded MLP, the accuracy is the **fixed-point datapath** accuracy at
-that precision (``validate.quantized_accuracy``, cached per (cell, bits));
-otherwise the float accuracy of the trained cell.
+When the hardware subspace has a ``weight_bits`` axis, the accuracy is the
+**fixed-point datapath** accuracy at that precision
+(``validate.quantized_accuracy``, cached per (cell, bits)) for every
+topology — the integer reference models dense, conv and OR-pool layers, so
+conv cells like ``dvs-conv`` are no longer padded with float accuracy.
 
 Per-layer axis columns (``lhr``, ``mem_blocks``) are padded with -1 to the
 widest cell when cells differ in layer count (the ``dataset`` axis mixes

@@ -33,9 +33,10 @@ PyTree = Any
 # in a custom_vjp whose backward is also block-skip), or the fused
 # GEMM+LIF scan-step kernel (``spike_gemm_fused``: the LIF update runs in
 # the accumulate epilogue so membrane state never round-trips through HBM).
-# Conv layers stay on ``lax.conv`` for now.  ``None`` resolves through the
-# environment so DSE cell training can opt whole processes in without
-# threading a flag.
+# Conv layers run the same block-skip accumulate over their im2col patch
+# matrix (``kernels/spike_conv.py``) on both kernel backends.  ``None``
+# resolves through the environment so DSE cell training can opt whole
+# processes in without threading a flag.
 
 MATMUL_BACKENDS = ("jnp", "spike_gemm", "spike_gemm_fused")
 MATMUL_BACKEND_ENV = "REPRO_MATMUL_BACKEND"
@@ -181,10 +182,14 @@ def _layer_current(spec: LayerSpec, p: PyTree, s_in: jax.Array,
     custom_vjp); the jnp path is the reference semantics.  The
     ``"spike_gemm_fused"`` backend bypasses this function entirely for Dense
     layers — ``step`` calls the fused GEMM+LIF kernel instead, so only jnp
-    and spike_gemm (and every Conv layer) land here.  ``perm`` is an
-    optional profiled pre-synaptic permutation (``ops.firing_rate_permutation``)
+    and spike_gemm (and every Conv layer) land here.  Conv layers route
+    through the patch-tiled block-skip kernel (``ops.spike_conv_train``) on
+    BOTH kernel backends; there is no fused conv epilogue, so the fused
+    backend shares the spike_gemm conv path.  ``perm`` is an optional
+    profiled pre-synaptic permutation (``ops.firing_rate_permutation``)
     that clusters cold neurons into skippable tiles — applied as
-    ``S[:, perm] @ W[perm, :]``, which leaves the product invariant.
+    ``S[:, perm] @ W[perm, :]``, which leaves the product invariant
+    (Dense-only; conv layers take no permutation).
     """
     if isinstance(spec, Dense):
         flat = s_in.reshape(s_in.shape[0], -1)
@@ -196,6 +201,10 @@ def _layer_current(spec: LayerSpec, p: PyTree, s_in: jax.Array,
                                                **KERNEL_BLOCKS) + p["b"]
         return flat @ p["w"] + p["b"]
     if isinstance(spec, Conv):
+        if matmul_backend in ("spike_gemm", "spike_gemm_fused"):
+            return kernel_ops.spike_conv_train(
+                s_in, p["w"], stride=spec.stride, padding=spec.padding,
+                **KERNEL_BLOCKS) + p["b"]
         out = jax.lax.conv_general_dilated(
             s_in, p["w"],
             window_strides=(spec.stride, spec.stride),

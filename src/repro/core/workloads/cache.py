@@ -24,8 +24,10 @@ most once, across repeated sweeps AND across processes:
 
 ``TraceCache.resolve`` is the single entry point; it also lazily extends the
 cell's quantized-accuracy table (``validate.quantized_accuracy`` at the
-requested ``weight_bits`` values) for rate-encoded MLP workloads — the
-accuracy leg of the ``weight_bits`` hardware axis.
+requested ``weight_bits`` values) for every workload topology — conv/pool
+layers run the fixed-point conv reference (``validate.reference_apply_batch``
+with layer specs), MLPs the integer-matmul one — the accuracy leg of the
+``weight_bits`` hardware axis.
 """
 from __future__ import annotations
 
@@ -148,9 +150,9 @@ class TraceCache:
                 budget: Optional[TrainingBudget] = None) -> CellArtifact:
         """Train-or-load one cell.  ``assignment`` must provide ``num_steps``
         and may provide ``population`` (default 1.0).  ``quant_bits``: weight
-        precisions whose fixed-point accuracy the caller needs (rate-encoded
-        MLPs only — the datapath ``validate`` models; silently skipped
-        otherwise) — computed once and appended to the cell's metadata.
+        precisions whose fixed-point accuracy the caller needs — computed
+        once (any topology: ``validate`` models dense, conv and pool
+        datapaths) and appended to the cell's metadata.
         ``budget``: a ``TrainingBudget`` charged one miss *before* training
         starts; an exhausted budget raises ``BudgetExceeded`` instead of
         training (hits are always free)."""
@@ -179,7 +181,7 @@ class TraceCache:
 
         quant = {int(k): float(v) for k, v in meta["quant_acc"].items()}
         missing = [int(b) for b in quant_bits if int(b) not in quant]
-        if missing and workload.is_mlp() and workload.encoding == "rate":
+        if missing:
             data = workload.make_data(T)
             for bits in missing:
                 quant[bits] = _quantized_accuracy(cfg, params, data, bits)
@@ -254,13 +256,28 @@ class TraceCache:
 
 
 def _quantized_accuracy(cfg: snn.SNNConfig, params, data, bits: int) -> float:
-    """Fixed-point datapath accuracy at ``bits``-bit weights (MLP only)."""
-    weights = [np.asarray(p["w"]) for p in params]
-    biases = [np.asarray(p["b"]) for p in params]
+    """Fixed-point datapath accuracy at ``bits``-bit weights (any topology:
+    conv/pool layers run the integer conv reference via layer specs)."""
+    weights, biases = [], []
+    for p in params:
+        if p:                       # MaxPool entries carry no parameters
+            weights.append(np.asarray(p["w"]))
+            biases.append(np.asarray(p["b"]))
+    specs = validate.layer_specs(cfg.layers)
+    conv_net = any(sp[0] != "dense" for sp in specs)
     n = min(_QUANT_SAMPLES, len(data.x_test))
-    x = jnp.asarray(data.x_test[:n]).reshape(n, -1)
-    spikes = np.asarray(encoding.rate_encode(
-        jax.random.key(1), x, cfg.num_steps)).astype(np.int64)
+    x = np.asarray(data.x_test[:n])
+    if x.ndim == 5:
+        # pre-encoded event data (B, T, H, W, C): already a spike train,
+        # same time-major transpose as train_snn._encode_input
+        spikes = x.transpose(1, 0, 2, 3, 4).astype(np.int64)
+    else:
+        flat = jnp.asarray(x).reshape(n, -1)
+        spikes = np.asarray(encoding.rate_encode(
+            jax.random.key(1), flat, cfg.num_steps)).astype(np.int64)
+        if conv_net:
+            spikes = spikes.reshape(cfg.num_steps, n, *cfg.input_shape)
     return validate.quantized_accuracy(
         weights, biases, spikes, data.y_test[:n],
-        num_classes=cfg.num_classes, frac_bits=int(bits) - 1)
+        num_classes=cfg.num_classes, frac_bits=int(bits) - 1,
+        specs=specs if conv_net else None)

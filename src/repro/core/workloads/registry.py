@@ -115,8 +115,10 @@ class Workload:
             w=self.input_shape[1], noise=self.noise)
 
     def is_mlp(self) -> bool:
-        """True when every layer is Dense — the topologies the fixed-point
-        validator (and so the quantized-accuracy leg) supports."""
+        """True when every layer is Dense — the topologies the *serial*
+        hardware model (``validate.HardwareModel``) simulates.  The
+        quantized-accuracy leg is no longer gated on this: the fixed-point
+        reference covers conv/pool layers too (``validate.layer_specs``)."""
         return all(isinstance(s, snn.Dense) for s in self.layers)
 
     def signature(self) -> dict:

@@ -10,6 +10,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.lif_step import LIF_BLOCKS, lif_step_pallas
+from repro.kernels.spike_conv import (conv_out_size, conv_patches,
+                                      spike_conv_pallas)
 from repro.kernels.spike_gemm import spike_gemm_pallas
 from repro.kernels.spike_gemm_bwd import (spike_gemm_ds_pallas,
                                           spike_gemm_dw_pallas)
@@ -209,6 +211,113 @@ def spike_gemm_train(spikes: jax.Array, weights: jax.Array, *,
     """Differentiable S @ W: block-skip Pallas forward and backward."""
     return _spike_gemm_train((block_m, block_n, block_k, interpret),
                              spikes, weights)
+
+
+# ---------------------------------------------------------------------------
+# Block-skip spike convolution (the conv datapath of the same engine)
+# ---------------------------------------------------------------------------
+# A Conv layer is the same sparsity-aware accumulate run over the im2col view
+# of its spike input: patches of {0,1} spikes are still {0,1} spikes, so the
+# sum>0 occupancy gate of ``block_flags`` stays exact on the patch matrix and
+# both backward matmuls are ordinary GEMM cotangents of that matrix — the
+# dW/dS kernels of spike_gemm_bwd.py are reused verbatim.  DESIGN.md §13.
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "block_m",
+                                             "block_n", "block_k",
+                                             "interpret"))
+def spike_conv(s_in: jax.Array, weights: jax.Array, *, stride: int = 1,
+               padding: str = "SAME", flags: jax.Array = None,
+               block_m: int = 128, block_n: int = 128, block_k: int = 128,
+               interpret: bool = True) -> jax.Array:
+    """Sparsity-aware NHWC x HWIO convolution with patch-tile skipping.
+
+    ``flags``: optional precomputed occupancy of the PATCH matrix
+    (``block_flags(conv_patches(s_in, ...))`` with the same block sizes);
+    when omitted the flags are computed here.  Output is (B, OH, OW, F),
+    bit-identical to ``lax.conv_general_dilated`` up to fp32 tile-order
+    rounding (exactly equal on grid operands — see tests/test_kernels.py).
+    """
+    B, H, W, C = s_in.shape
+    kh, kw, cin, cout = weights.shape
+    if cin != C:
+        raise ValueError(f"weights expect {cin} input channels, spikes "
+                         f"have {C}")
+    oh, _, _ = conv_out_size(H, kh, stride, padding)
+    ow, _, _ = conv_out_size(W, kw, stride, padding)
+    patches = conv_patches(s_in, kh, kw, stride, padding)
+    p = _pad_to(patches, (block_m, block_k))
+    w = _pad_to(weights.reshape(kh * kw * cin, cout), (block_k, block_n))
+    if flags is None:
+        flags = ref.block_flags_ref(p, block_m, block_k)
+    want = (p.shape[0] // block_m, p.shape[1] // block_k)
+    if flags.shape != want:
+        raise ValueError(
+            f"flags shape {flags.shape} does not match the {want} tile grid "
+            f"of the patch matrix {patches.shape} at block_m={block_m}, "
+            f"block_k={block_k}; build them with ops.block_flags on "
+            f"ops.conv_patches of the same spike tensor")
+    out = spike_conv_pallas(flags, p, w, block_m=block_m, block_n=block_n,
+                            block_k=block_k, interpret=interpret)
+    return out[:B * oh * ow, :cout].reshape(B, oh, ow, cout)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _spike_conv_train(static: tuple, s_in: jax.Array,
+                      weights: jax.Array) -> jax.Array:
+    stride, padding, block_m, block_n, block_k, interpret = static
+    return spike_conv(s_in, weights, stride=stride, padding=padding,
+                      block_m=block_m, block_n=block_n, block_k=block_k,
+                      interpret=interpret)
+
+
+def _spike_conv_train_fwd(static, s_in, weights):
+    stride, padding, block_m, block_n, block_k, interpret = static
+    kh, kw = weights.shape[:2]
+    patches = conv_patches(s_in, kh, kw, stride, padding)
+    flags = block_flags(patches, block_m=block_m, block_k=block_k)
+    out = spike_conv(s_in, weights, stride=stride, padding=padding,
+                     flags=flags, block_m=block_m, block_n=block_n,
+                     block_k=block_k, interpret=interpret)
+    # the flags ride the residuals (PR-6 contract): the backward reuses the
+    # forward's occupancy reduction instead of recomputing it.  The patch
+    # matrix itself is NOT saved — it is cheap deterministic slicing of
+    # ``s_in`` and rebuilding it keeps residual memory at O(B·H·W·C) instead
+    # of O(B·OH·OW·KH·KW·C).
+    return out, (s_in, weights, flags)
+
+
+def _spike_conv_train_bwd(static, res, g):
+    stride, padding, block_m, block_n, block_k, interpret = static
+    s_in, weights, flags = res
+    kh, kw, cin, cout = weights.shape
+    patch_fn = lambda x: conv_patches(x, kh, kw, stride, padding)
+    patches, unpatch = jax.vjp(patch_fn, s_in)
+    g2 = g.reshape(-1, cout).astype(jnp.float32)
+    d_w = spike_gemm_bwd_dw(
+        patches, g2, flags=flags, block_m=block_m, block_n=block_n,
+        block_k=block_k, interpret=interpret)
+    d_patches = spike_gemm_bwd_ds(
+        g2, weights.reshape(kh * kw * cin, cout), block_m=block_m,
+        block_n=block_n, block_k=block_k, interpret=interpret)
+    # col2im: the exact linear transpose of conv_patches (pad + strided
+    # slice + concat), derived by jax.vjp so overlap scatter-adds match the
+    # dense conv's input cotangent bit for bit on grid operands.
+    (d_s,) = unpatch(d_patches.astype(s_in.dtype))
+    return d_s, d_w.reshape(kh, kw, cin, cout).astype(weights.dtype)
+
+
+_spike_conv_train.defvjp(_spike_conv_train_fwd, _spike_conv_train_bwd)
+
+
+def spike_conv_train(s_in: jax.Array, weights: jax.Array, *, stride: int = 1,
+                     padding: str = "SAME", block_m: int = 128,
+                     block_n: int = 128, block_k: int = 128,
+                     interpret: bool = True) -> jax.Array:
+    """Differentiable block-skip convolution: patch-tiled forward, block-skip
+    dW/dS backward reusing the forward's flags from the VJP residuals."""
+    return _spike_conv_train(
+        (int(stride), str(padding), block_m, block_n, block_k, interpret),
+        s_in, weights)
 
 
 # ---------------------------------------------------------------------------

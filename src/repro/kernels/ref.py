@@ -33,6 +33,16 @@ def spike_gemm_ref(spikes: jax.Array, weights: jax.Array) -> jax.Array:
     return jnp.dot(spikes, weights, preferred_element_type=jnp.float32)
 
 
+def spike_conv_ref(s_in: jax.Array, weights: jax.Array, *, stride: int = 1,
+                   padding: str = "SAME") -> jax.Array:
+    """Dense conv oracle: XLA's own NHWC x HWIO convolution — the exact
+    operation the block-skip patch-tiled kernel must reproduce."""
+    return jax.lax.conv_general_dilated(
+        s_in, weights, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32)
+
+
 def penc_compact_ref(spikes: jax.Array, capacity: int
                      ) -> tuple[jax.Array, jax.Array]:
     """Oracle for the PENC compaction kernel: per row, ascending indices of

@@ -123,6 +123,20 @@ class TestCoExplore:
             c = cell[(r["num_steps"], r["population"])]
             assert r["accuracy"] == c.quant_acc[r["weight_bits"]]
 
+    def test_conv_cells_get_quantized_accuracy(self, shared_cache):
+        """The unlocked path: a conv cell on the weight_bits axis reports
+        the FIXED-POINT conv-datapath accuracy (per-bits quant_acc table),
+        not the float-accuracy fallback the old rate-MLP-only gate forced."""
+        res = dse.coexplore(_tiny_conv(), num_steps=(2,), max_lhr=2,
+                            weight_bits=(4, 8), cache=shared_cache)
+        (cell,) = res.cells
+        assert set(cell.quant_acc) == {4, 8}        # measured, not skipped
+        fr = res.frontier
+        assert "weight_bits" in fr.columns
+        for i in range(len(fr)):
+            r = fr.row(i)
+            assert r["accuracy"] == cell.quant_acc[r["weight_bits"]]
+
     def test_each_cell_trains_exactly_once(self, shared_cache):
         """Repeat of the acceptance sweep: zero new training, identical
         frontier."""

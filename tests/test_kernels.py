@@ -349,6 +349,94 @@ class TestKernelPlumbing:
         assert sorted(np.asarray(perm).tolist()) == list(range(K))
 
 
+class TestSpikeConvKernel:
+    """Patch-tiled block-skip convolution (spike_conv.py) vs the dense
+    ``lax.conv`` oracle — bit-for-bit on 1/256-grid weights, because with
+    grid operands every fp32 accumulate is exact and tile order (or
+    skipping) cannot change a single bit."""
+
+    @staticmethod
+    def _inputs(shape, kernel, cout, density, seed=0):
+        rng = np.random.default_rng(seed)
+        B, H, W, C = shape
+        s = jnp.asarray((rng.random((B, H, W, C)) < density)
+                        .astype(np.float32))
+        w = jnp.asarray(rng.integers(-64, 64, (kernel, kernel, C, cout))
+                        / 256.0, dtype=jnp.float32)
+        return s, w
+
+    @pytest.mark.parametrize("shape", [(2, 9, 9, 3), (1, 12, 10, 2),
+                                       (3, 8, 8, 1), (2, 7, 11, 2)])
+    @pytest.mark.parametrize("density", [0.0, 0.05, 0.5])
+    @pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "SAME"),
+                                                (1, "VALID"), (2, "VALID")])
+    def test_matches_dense_conv_oracle(self, shape, density, stride, padding):
+        """Non-tile-multiple spatial shapes (M = B·OH·OW and K = KH·KW·C both
+        ragged against the 8x128 grid): exact equality with XLA's conv."""
+        s, w = self._inputs(shape, 3, 5, density)
+        got = ops.spike_conv(s, w, stride=stride, padding=padding,
+                             block_m=8)
+        want = ref.spike_conv_ref(s, w, stride=stride, padding=padding)
+        assert got.shape == want.shape
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_skip_vs_all_ones_flags_bitident(self):
+        """Running the conv kernel with the real (skipping) patch flags is
+        bit-identical to forcing every flag on: an empty patch tile holds
+        receptive fields that saw no spikes and contributes exactly zero."""
+        rng = np.random.default_rng(3)
+        s = (rng.random((4, 16, 16, 2)) < 0.2).astype(np.float32)
+        s[:2] = 0.0                      # whole samples silent -> empty tiles
+        s = jnp.asarray(s)
+        w = jnp.asarray(rng.integers(-64, 64, (3, 3, 2, 6)) / 256.0,
+                        dtype=jnp.float32)
+        patches = ops.conv_patches(s, 3, 3, 1, "SAME")
+        flags = ops.block_flags(patches, block_m=8, block_k=128)
+        assert float(flags.mean()) < 1.0          # something is skipped
+        a = ops.spike_conv(s, w, flags=flags, block_m=8)
+        b = ops.spike_conv(s, w, flags=jnp.ones_like(flags), block_m=8)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_all_zero_train_is_pure_bias(self):
+        """Every patch tile skipped: the layer current reduces to the bias
+        broadcast — checked on the routed snn path, not just the raw op."""
+        from repro.core import snn
+        s = jnp.zeros((3, 10, 10, 2), jnp.float32)
+        w = jax.random.normal(jax.random.key(0), (3, 3, 2, 4))
+        out = ops.spike_conv(s, w, block_m=8)
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+        patches = ops.conv_patches(s, 3, 3, 1, "SAME")
+        assert ops.skip_fraction(patches, 8, 128) == 1.0
+        spec = snn.Conv(4, 3)
+        p = {"w": w, "b": jnp.full((4,), 0.25, jnp.float32)}
+        cur = snn._layer_current(spec, p, s, matmul_backend="spike_gemm")
+        np.testing.assert_array_equal(np.asarray(cur), 0.25)
+
+    def test_rejects_mismatched_flags(self):
+        s = jnp.ones((2, 8, 8, 2), jnp.float32)
+        w = jnp.ones((3, 3, 2, 4), jnp.float32)
+        bad = jnp.ones((1, 1), jnp.int32)
+        with pytest.raises(ValueError, match="tile grid"):
+            ops.spike_conv(s, w, flags=bad, block_m=8)
+
+    @pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "SAME"),
+                                                (1, "VALID"), (2, "VALID")])
+    def test_patch_matrix_is_binary_and_flags_exact(self, stride, padding):
+        """The im2col view of a {0,1} spike tensor is itself {0,1}, so the
+        sum>0 occupancy gate stays exact on the patch matrix (DESIGN.md §13):
+        a flag is 0 iff its tile holds no spikes."""
+        rng = np.random.default_rng(11)
+        s = jnp.asarray((rng.random((2, 11, 9, 3)) < 0.1).astype(np.float32))
+        patches = np.asarray(ops.conv_patches(s, 3, 3, stride, padding))
+        assert set(np.unique(patches)) <= {0.0, 1.0}
+        padded = np.asarray(ops._pad_to(jnp.asarray(patches), (8, 128)))
+        flags = np.asarray(ops.block_flags(jnp.asarray(patches),
+                                           block_m=8, block_k=128))
+        fm, fk = flags.shape
+        tiles = padded.reshape(fm, 8, fk, 128).sum((1, 3))
+        np.testing.assert_array_equal(flags, (tiles > 0).astype(np.int32))
+
+
 class TestPENCCompact:
     """PENC address-extraction kernel vs oracle vs the serial validator."""
 

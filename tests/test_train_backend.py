@@ -78,6 +78,95 @@ class TestTrainingParity:
             assert acc_j == acc_k
 
 
+def _conv_cfg(num_steps=3):
+    """Shrunk dvs-conv-style topology: Conv + OR-pool + Dense classifier on
+    an 8x8x2 event retina (interpret-mode Pallas executes the patch grid
+    serially, so B·OH·OW stays small)."""
+    return snn.SNNConfig(name="conv-parity", input_shape=(8, 8, 2),
+                         layers=(snn.Conv(3, 3), snn.MaxPool(2),
+                                 snn.Dense(10)),
+                         num_classes=10, num_steps=num_steps)
+
+
+@pytest.fixture(scope="module")
+def conv_data():
+    return synthetic.make_events(name="synth-conv-parity", seed=6,
+                                 num_classes=10, n_train=96, n_test=32,
+                                 t=3, h=8, w=8)
+
+
+class TestConvTrainingParity:
+    """Same contract as TestTrainingParity, on the conv datapath: Conv
+    layers route through the patch-tiled block-skip kernel on the
+    spike_gemm/spike_gemm_fused backends (no lax.conv fallback), and the
+    result is spike-for-spike the jnp reference."""
+
+    def test_conv_layers_route_through_kernel(self, monkeypatch):
+        """No lax.conv on the kernel backends: stub spike_conv_train to
+        prove _layer_current actually calls it for Conv layers."""
+        from repro.kernels import ops as kernel_ops
+        calls = []
+        real = kernel_ops.spike_conv_train
+
+        def spy(*a, **kw):
+            calls.append(kw)
+            return real(*a, **kw)
+
+        monkeypatch.setattr(kernel_ops, "spike_conv_train", spy)
+        cfg = _conv_cfg()
+        params = snn.init_params(jax.random.key(0), cfg)
+        x = jnp.zeros((2, 8, 8, 2), jnp.float32)
+        snn._layer_current(cfg.layers[0], params[0], x,
+                           matmul_backend="jnp")
+        assert not calls                      # jnp path: dense lax.conv
+        for backend in snn.MATMUL_BACKENDS[1:]:
+            snn._layer_current(cfg.layers[0], params[0], x,
+                               matmul_backend=backend)
+        assert len(calls) == len(snn.MATMUL_BACKENDS) - 1
+
+    def test_traces_backend_invariant(self, conv_data):
+        """Same-seed dvs-conv training, then bit-identical dump_traces /
+        trace_counts under every backend in MATMUL_BACKENDS — the property
+        that keeps conv cells backend-free in the cache."""
+        cfg = _conv_cfg()
+        res = train_snn.train(cfg, conv_data, steps=8, batch_size=16,
+                              seed=3)
+        traces, counts = {}, {}
+        for backend in snn.MATMUL_BACKENDS:
+            traces[backend] = train_snn.dump_traces(
+                cfg, res.params, conv_data.x_test, max_samples=16,
+                matmul_backend=backend)
+            counts[backend] = train_snn.trace_counts(
+                cfg, res.params, conv_data.x_test, max_samples=16,
+                matmul_backend=backend)
+        for backend in snn.MATMUL_BACKENDS[1:]:
+            for a, b in zip(traces["jnp"]["layer_input_spike_counts"],
+                            traces[backend]["layer_input_spike_counts"]):
+                np.testing.assert_array_equal(a, b)
+            for a, b in zip(counts["jnp"], counts[backend]):
+                np.testing.assert_array_equal(a, b)
+
+    def test_loss_and_grads_match(self, conv_data):
+        """Surrogate-gradient BPTT through the conv custom_vjp: loss value
+        and every parameter cotangent match the jnp reference."""
+        cfg = _conv_cfg()
+        params = snn.init_params(jax.random.key(1), cfg)
+        x = jnp.asarray(conv_data.x_train[:16])
+        y = jnp.asarray(conv_data.y_train[:16])
+        key = jax.random.key(2)
+        vals, grads = {}, {}
+        for backend in snn.MATMUL_BACKENDS:
+            vals[backend], grads[backend] = jax.value_and_grad(
+                lambda p: train_snn.loss_fn(cfg, p, key, x, y,
+                                            matmul_backend=backend))(params)
+        for backend in snn.MATMUL_BACKENDS[1:]:
+            np.testing.assert_allclose(float(vals["jnp"]),
+                                       float(vals[backend]), rtol=1e-6)
+            jax.tree.map(lambda a, b: np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-5),
+                grads["jnp"], grads[backend])
+
+
 class TestBackendResolution:
     def test_explicit_arg_wins(self, monkeypatch):
         monkeypatch.setenv(snn.MATMUL_BACKEND_ENV, "spike_gemm")
@@ -139,6 +228,28 @@ class TestWorkloadRecipe:
         assert not cell_j.cache_hit
         cell_k = tc.resolve(self._tiny(matmul_backend="spike_gemm"), a,
                             seed=0)
+        assert cell_k.cache_hit
+        for x, y in zip(cell_j.counts, cell_k.counts):
+            np.testing.assert_array_equal(x, y)
+
+    def test_conv_cell_trained_on_jnp_is_hit_for_kernel_recipe(self,
+                                                               tmp_path):
+        """Conv cells share the backend-free key too: a jnp-trained
+        dvs-conv-style cell resolves as a cache hit for a spike_gemm
+        recipe, with the identical trace artifact."""
+        conv_wl = dataclasses.replace(
+            workloads.get("dvs-conv"), name="tiny-conv-backend",
+            input_shape=(8, 8, 2),
+            layers=(snn.Conv(3, 3), snn.MaxPool(2), snn.Dense(10)),
+            num_classes=10, pcr=1, n_train=64, n_test=16, train_steps=2,
+            batch_size=16, trace_samples=8)
+        conv_k = dataclasses.replace(conv_wl, matmul_backend="spike_gemm")
+        assert conv_wl.signature() == conv_k.signature()
+        tc = cache.TraceCache(root=str(tmp_path))
+        a = {"num_steps": 3, "population": 1.0}
+        cell_j = tc.resolve(conv_wl, a, seed=0)
+        assert not cell_j.cache_hit
+        cell_k = tc.resolve(conv_k, a, seed=0)
         assert cell_k.cache_hit
         for x, y in zip(cell_j.counts, cell_k.counts):
             np.testing.assert_array_equal(x, y)

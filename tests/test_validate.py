@@ -79,3 +79,142 @@ class TestSpikeToSpike:
             out[t] = s[-1]
         agreement = (out == fixed).mean()
         assert agreement > 0.95
+
+
+def _random_conv_net(rng, cin=2, c1=4, n_out=6):
+    """3x3 conv -> 2x2 OR-pool -> dense classifier, float params."""
+    weights = [rng.normal(0, 0.5, size=(3, 3, cin, c1)),
+               rng.normal(0, 0.3, size=(4 * 4 * c1, n_out))]
+    biases = [rng.normal(0, 0.1, size=(c1,)),
+              rng.normal(0, 0.1, size=(n_out,))]
+    specs = [("conv", 1, "SAME"), ("pool", 2), ("dense",)]
+    return weights, biases, specs
+
+
+def _float_conv_sim(weights, biases, spikes, beta=0.9, threshold=1.0):
+    """Float twin of the fixed-point conv forward (same LIF dynamics)."""
+    T, B = spikes.shape[:2]
+    w_conv, w_fc = weights
+    c1, n_out = w_conv.shape[-1], w_fc.shape[-1]
+    H = spikes.shape[2]
+    u = [np.zeros((B, H, H, c1)), np.zeros((B, n_out))]
+    s = [np.zeros((B, H, H, c1)), np.zeros((B, n_out))]
+    out = np.zeros((T, B, n_out))
+    for t in range(T):
+        x = spikes[t].astype(float)
+        xp = np.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+        acc = np.zeros((B, H, H, c1))
+        for dy in range(3):
+            for dx in range(3):
+                acc += xp[:, dy:dy + H, dx:dx + H, :] @ w_conv[dy, dx]
+        u[0] = beta * u[0] + acc + biases[0] - threshold * s[0]
+        s[0] = (u[0] >= threshold).astype(float)
+        pooled = s[0].reshape(B, H // 2, 2, H // 2, 2, c1).max((2, 4))
+        u[1] = beta * u[1] + pooled.reshape(B, -1) @ w_fc + biases[1] \
+            - threshold * s[1]
+        s[1] = (u[1] >= threshold).astype(float)
+        out[t] = s[1]
+    return out
+
+
+class TestFixedPointConv:
+    """The conv/pool extension of the fixed-point reference — the datapath
+    behind the ``weight_bits`` axis of conv cells (DESIGN.md §13)."""
+
+    def _spikes(self, rng, T=8, B=4, H=8, C=2, density=0.3):
+        return (rng.random((T, B, H, H, C)) < density).astype(np.int64)
+
+    def test_high_bits_matches_float(self):
+        """At Q12 the quantized conv/pool forward agrees with the float
+        simulation on nearly every output spike."""
+        rng = np.random.default_rng(7)
+        weights, biases, specs = _random_conv_net(rng)
+        spikes = self._spikes(rng)
+        net = validate.quantize(weights, biases, beta=0.9, threshold=1.0,
+                                frac_bits=12, specs=specs)
+        fixed = validate.reference_apply_batch(net, spikes)
+        flt = _float_conv_sim(weights, biases, spikes)
+        assert (flt == fixed).mean() > 0.95
+
+    def test_degrades_monotonically_ish_at_low_bits(self):
+        """Coarser grids agree less with the float net; the trend only has
+        to be monotonic-ish (thresholding can mask small grid changes)."""
+        rng = np.random.default_rng(3)
+        weights, biases, specs = _random_conv_net(rng)
+        spikes = self._spikes(rng, T=10)
+        flt = _float_conv_sim(weights, biases, spikes)
+        agree = {}
+        for frac in (1, 6, 12):
+            net = validate.quantize(weights, biases, beta=0.9,
+                                    threshold=1.0, frac_bits=frac,
+                                    specs=specs)
+            agree[frac] = (validate.reference_apply_batch(net, spikes)
+                           == flt).mean()
+        assert agree[12] > 0.9
+        assert agree[12] >= agree[6] >= agree[1] - 0.05
+        assert agree[1] < agree[12]
+
+    def test_pool_is_or_on_spikes(self):
+        x = np.zeros((1, 4, 4, 1), np.int64)
+        x[0, 0, 0, 0] = 1                     # one spike per 2x2 window -> 1
+        x[0, 3, 3, 0] = 1
+        got = validate._or_pool_int(x, 2)
+        want = np.zeros((1, 2, 2, 1), np.int64)
+        want[0, 0, 0, 0] = 1
+        want[0, 1, 1, 0] = 1
+        np.testing.assert_array_equal(got, want)
+
+    def test_pool_truncates_ragged_edges(self):
+        """Odd spatial sizes truncate like snn._or_pool's VALID window."""
+        x = np.ones((1, 5, 5, 1), np.int64)
+        assert validate._or_pool_int(x, 2).shape == (1, 2, 2, 1)
+
+    def test_dense_specs_equal_legacy_mlp_path(self):
+        """An all-dense specs list is bit-identical to the original specs
+        =None MLP forward (the generalized loop is a strict superset)."""
+        rng = np.random.default_rng(5)
+        net = _random_net(rng, (24, 16, 8))
+        spikes = (rng.random((6, 4, 24)) < 0.3).astype(np.int64)
+        legacy = validate.reference_apply_batch(net, spikes)
+        import dataclasses
+        net_specs = dataclasses.replace(net, specs=[("dense",), ("dense",)])
+        np.testing.assert_array_equal(
+            legacy, validate.reference_apply_batch(net_specs, spikes))
+
+    def test_quantized_accuracy_covers_dvs_conv_topology(self):
+        """quantized_accuracy no longer raises (or silently skips) on the
+        dvs-conv topology: random params, event spikes, valid accuracy."""
+        import jax
+        from repro.core import snn, workloads
+        wl = workloads.get("dvs-conv")
+        cfg = wl.build(4, 1.0)
+        params = snn.init_params(jax.random.key(0), cfg)
+        weights = [np.asarray(p["w"]) for p in params if p]
+        biases = [np.asarray(p["b"]) for p in params if p]
+        specs = validate.layer_specs(cfg.layers)
+        rng = np.random.default_rng(0)
+        spikes = (rng.random((4, 8) + cfg.input_shape) < 0.2).astype(np.int64)
+        labels = rng.integers(0, cfg.num_classes, 8)
+        acc = validate.quantized_accuracy(
+            weights, biases, spikes, labels, num_classes=cfg.num_classes,
+            frac_bits=7, specs=specs)
+        assert 0.0 <= acc <= 1.0
+
+    def test_layer_specs_duck_typing(self):
+        from repro.core import snn
+        specs = validate.layer_specs(
+            (snn.Conv(4, 3, stride=2, padding="VALID"), snn.MaxPool(2),
+             snn.Dense(8)))
+        assert specs == [("conv", 2, "VALID"), ("pool", 2), ("dense",)]
+
+    def test_serial_paths_reject_conv_nets(self):
+        """HardwareModel / reference_apply model the fc datapath only and
+        must refuse conv specs loudly instead of mis-shaping."""
+        rng = np.random.default_rng(1)
+        weights, biases, specs = _random_conv_net(rng)
+        net = validate.quantize(weights, biases, beta=0.9, threshold=1.0,
+                                specs=specs)
+        with pytest.raises(ValueError, match="fc"):
+            validate.HardwareModel(net)
+        with pytest.raises(ValueError, match="fc"):
+            validate.reference_apply(net, np.zeros((2, 24), np.int64))

@@ -137,7 +137,9 @@ class TestTraceCache:
                           quant_bits=(4, 8))
         assert c.quant_acc == b.quant_acc
 
-    def test_quant_bits_skipped_for_non_mlp(self, tmp_path):
+    def test_quant_bits_measured_for_conv_net(self, tmp_path):
+        """Conv topologies get a real fixed-point leg now (the conv
+        reference in ``validate``), not a float-accuracy fallback."""
         wl = dataclasses.replace(
             workloads.get("dvs-conv"), name="dvs-cache-test",
             layers=(snn.Conv(2, 3), snn.MaxPool(2), snn.Dense(8)),
@@ -146,13 +148,14 @@ class TestTraceCache:
         cache = workloads.TraceCache(root=str(tmp_path))
         a = cache.resolve(wl, {"num_steps": 3, "population": 1.0},
                           quant_bits=(8,))
-        assert a.quant_acc == {}                    # conv: no fixed-point leg
-        assert a.accuracy_at(8) == a.accuracy
+        assert set(a.quant_acc) == {8}
+        assert 0.0 <= a.quant_acc[8] <= 1.0
+        assert a.accuracy_at(8) == a.quant_acc[8]
 
-    def test_quant_bits_skipped_for_event_mlp(self, tmp_path):
-        """Dense-only event workloads pass is_mlp() but the fixed-point
-        validator only models the rate-encoded datapath — the quant leg
-        must skip them, not crash on the (N, T, H, W, 2) test set."""
+    def test_quant_bits_measured_for_event_mlp(self, tmp_path):
+        """Dense-only event workloads feed the pre-encoded (N, T, H, W, 2)
+        test set straight into the fixed-point datapath (flattened per
+        step) — measured, not skipped."""
         wl = workloads.Workload(
             name="dvs-mlp-cache-test", dataset="dvs", encoding="event",
             input_shape=(8, 8, 2), layers=(snn.Dense(6),), num_classes=4,
@@ -161,8 +164,8 @@ class TestTraceCache:
         cache = workloads.TraceCache(root=str(tmp_path))
         a = cache.resolve(wl, {"num_steps": 3, "population": 1.0},
                           quant_bits=(8,))
-        assert a.quant_acc == {}
-        assert a.accuracy_at(8) == a.accuracy
+        assert set(a.quant_acc) == {8}
+        assert a.accuracy_at(8) == a.quant_acc[8]
 
     def test_accuracy_at_prefers_quantized(self, tmp_path):
         wl = _tiny()
