@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, emit_json, timed
+from benchmarks.common import emit, emit_json, timed, timed_compile
 from repro.core import encoding, snn, train_snn
 from repro.core.workloads import registry
 from repro.data import synthetic
@@ -123,11 +123,14 @@ def _bptt_cell(wl: registry.Workload, T: int, pop: float) -> None:
             lambda p, b=backend: train_snn.loss_fn(cfg, p, key, xb, yb,
                                                    matmul_backend=b)))
         # repeats=3: these fields are regression-tracked by bench_diff, so
-        # average away single-sample scheduler noise on shared CI runners
-        _, us_fwd = timed(lambda: jax.block_until_ready(fwd(res.params)),
-                          repeats=3)
-        _, us = timed(lambda: jax.block_until_ready(vg(res.params)),
-                      repeats=3)
+        # average away single-sample scheduler noise on shared CI runners.
+        # The warmup call is the explicit compile pass — its wall-clock is
+        # reported separately as *_compile_seconds, never folded into the
+        # steady-state per-call figures.
+        _, us_fwd, c_fwd = timed_compile(
+            lambda: jax.block_until_ready(fwd(res.params)), repeats=3)
+        _, us, c_vg = timed_compile(
+            lambda: jax.block_until_ready(vg(res.params)), repeats=3)
         step_seconds[backend] = us / 1e6
         fields[f"{backend}_fwd_seconds"] = round(us_fwd / 1e6, 6)
         # the backward's cost is the fwd+bwd step minus the fwd-only pass
@@ -135,6 +138,10 @@ def _bptt_cell(wl: registry.Workload, T: int, pop: float) -> None:
         fields[f"{backend}_bwd_seconds"] = round(
             max((us - us_fwd) / 1e6, 0.0), 6)
         fields[f"{backend}_step_seconds"] = round(us / 1e6, 6)
+        # total jit-compile cost of this backend's cell (fwd + fwd/bwd):
+        # what every fresh cellfarm worker pays once per cell, and what
+        # stacked training amortizes over the whole cell stack
+        fields[f"{backend}_compile_seconds"] = round(c_fwd + c_vg, 6)
 
     spikes_in = train_snn._encode_input(
         jax.random.key(1), jnp.asarray(data.x_test[:32]), T)

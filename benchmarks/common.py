@@ -8,12 +8,23 @@ from typing import Callable
 
 def timed(fn: Callable, *args, repeats: int = 3, **kw):
     """Returns (result, microseconds per call)."""
+    result, us, _ = timed_compile(fn, *args, repeats=repeats, **kw)
+    return result, us
+
+
+def timed_compile(fn: Callable, *args, repeats: int = 3, **kw):
+    """``timed`` with the warmup made explicit: also returns the first
+    (compiling) call's wall-clock in seconds, so benchmarks can report
+    ``compile_seconds`` separately instead of folding jit compile into —
+    or silently dropping it from — the steady-state per-call figure."""
+    t0 = time.perf_counter()
     fn(*args, **kw)                      # warmup / compile
+    compile_seconds = time.perf_counter() - t0
     t0 = time.perf_counter()
     for _ in range(repeats):
         result = fn(*args, **kw)
     us = (time.perf_counter() - t0) / repeats * 1e6
-    return result, us
+    return result, us, compile_seconds
 
 
 def emit(name: str, us_per_call: float, derived: str):

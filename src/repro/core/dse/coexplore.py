@@ -96,7 +96,8 @@ def coexplore(workload: Union[str, Workload, None] = None,
               lib: Optional[resources.CostLibrary] = None,
               strategy: Optional[Strategy] = None,
               train_budget: Union[int, TrainingBudget, None] = None,
-              workers: int = 0) -> CoExploreResult:
+              workers: int = 0,
+              stack: bool = False) -> CoExploreResult:
     """Joint model x hardware search returning an accuracy-aware frontier.
 
     Model axes come from ``space`` (a ``SearchSpace`` with ``add_model``
@@ -116,9 +117,10 @@ def coexplore(workload: Union[str, Workload, None] = None,
 
     ``strategy`` defaults to exhaustive cell enumeration (``GridSearch``);
     pass ``RandomSearch``/``EvolutionarySearch`` (with a declared joint
-    space) plus ``train_budget=k`` for the NAS-style budgeted loop, and
-    ``workers=N`` to farm cell training across processes — all forwarded to
-    ``dse.explore``.
+    space) plus ``train_budget=k`` for the NAS-style budgeted loop,
+    ``workers=N`` to farm cell training across processes, and
+    ``stack=True`` to batch same-signature cells into one vmapped stack
+    (``repro.distributed.cellstack``) — all forwarded to ``dse.explore``.
     """
     study = explore(
         space, workload=workload, datasets=datasets, num_steps=num_steps,
@@ -126,7 +128,7 @@ def coexplore(workload: Union[str, Workload, None] = None,
         weight_bits=weight_bits, objectives=objectives, cache=cache,
         seed=seed, chunk_size=chunk_size, keep_all=keep_all, lib=lib,
         strategy=strategy if strategy is not None else GridSearch(chunk_size),
-        train_budget=train_budget, workers=workers)
+        train_budget=train_budget, workers=workers, stack=stack)
     return CoExploreResult(objectives=study.objectives,
                            frontier=study.frontier, cells=study.cells,
                            n_evaluated=study.n_evaluated, cache=study.cache,

@@ -237,6 +237,7 @@ class Study(FrontierQueries):
                  cell_plan: Optional[list[tuple]] = None,
                  l_max: int = 0,
                  workers: int = 0,
+                 stack: bool = False,
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every: Optional[int] = None):
         self.mode = mode
@@ -252,6 +253,7 @@ class Study(FrontierQueries):
         self.budget = budget
         self.seed = seed
         self.workers = workers
+        self.stack = stack
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = checkpoint_every
         self._resolve_wl = resolve_wl
@@ -480,8 +482,9 @@ class Study(FrontierQueries):
 
     def _farm_chunk(self, uniq_model_rows: np.ndarray) -> None:
         """Train this chunk's unresolved, affordable cells across worker
-        processes before the serial resolution loop (joint mode)."""
-        if self.workers < 2:
+        processes — or as vmapped same-signature stacks with ``stack=True``
+        — before the serial resolution loop (joint mode)."""
+        if self.workers < 2 and not self.stack:
             return
         jobs, keys = [], []
         afford = (self.budget.remaining if self.budget is not None
@@ -508,7 +511,7 @@ class Study(FrontierQueries):
                 quant_bits=tuple(_bits_values(sub))))
             keys.append(key)
         self._charge_farmed(cellfarm.resolve_cells(
-            jobs, self.cache.root, workers=self.workers))
+            jobs, self.cache.root, workers=self.workers, stack=self.stack))
 
     def _charge_farmed(self, outcomes: list) -> None:
         for out in outcomes:
@@ -565,9 +568,10 @@ class Study(FrontierQueries):
         self.cells.append(live.record)
 
     def _prefetch_cells(self) -> None:
-        """Farm the cell plan's pending training across worker processes
-        (cells mode) — afterwards every farmed cell resolves as a hit."""
-        if self._prefetched or self.workers < 2:
+        """Farm the cell plan's pending training across worker processes —
+        or vmapped same-signature stacks with ``stack=True`` (cells mode);
+        afterwards every prefetched cell resolves as a hit."""
+        if self._prefetched or (self.workers < 2 and not self.stack):
             return
         self._prefetched = True
         jobs = []
@@ -585,7 +589,7 @@ class Study(FrontierQueries):
                 workload=wl, assignment=cell_asn, seed=self.seed,
                 quant_bits=tuple(_bits_values(sub))))
         self._charge_farmed(cellfarm.resolve_cells(
-            jobs, self.cache.root, workers=self.workers))
+            jobs, self.cache.root, workers=self.workers, stack=self.stack))
 
     # ---- checkpoint / resume ----------------------------------------------
     def _signature(self) -> str:
@@ -749,6 +753,7 @@ def explore(space: Optional[SearchSpace] = None, *,
             lib: Optional[resources.CostLibrary] = None,
             # study lifecycle
             workers: int = 0,
+            stack: bool = False,
             checkpoint_dir: Optional[str] = None,
             checkpoint_every: Optional[int] = None,
             resume: bool = False,
@@ -766,7 +771,10 @@ def explore(space: Optional[SearchSpace] = None, *,
 
     ``checkpoint_dir`` + ``checkpoint_every=n`` checkpoint the study every n
     steps; ``resume=True`` restores from ``checkpoint_dir`` and continues.
-    ``workers=N`` trains pending cells across N processes.  ``run=False``
+    ``workers=N`` trains pending cells across N processes; ``stack=True``
+    prefers batching same-signature cells into one vmapped device-resident
+    stack over farming them (``repro.distributed.cellstack`` — published
+    cells are bit-identical to solo training either way).  ``run=False``
     returns the un-run study for manual ``step()``-ing.
     """
     if chunk_size < 1:
@@ -792,12 +800,14 @@ def explore(space: Optional[SearchSpace] = None, *,
             weight_bits=weight_bits, cache=cache, seed=seed,
             train_budget=train_budget, strategy=strategy,
             objectives=objectives, chunk_size=chunk_size, keep_all=keep_all,
-            lib=lib, workers=workers, checkpoint_dir=checkpoint_dir,
+            lib=lib, workers=workers, stack=stack,
+            checkpoint_dir=checkpoint_dir,
             checkpoint_every=checkpoint_every)
     else:
         ignored = [name for name, val, default in (
             ("cache", cache, None), ("train_budget", train_budget, None),
-            ("workers", workers, 0), ("hw_space", hw_space, None),
+            ("workers", workers, 0), ("stack", stack, False),
+            ("hw_space", hw_space, None),
             ("max_lhr", max_lhr, None), ("weight_bits", weight_bits, None),
             ("seed", seed, 0)) if val != default]
         if ignored:
@@ -844,7 +854,7 @@ def _build_hardware(space, *, config, counts, strategy, objectives,
 def _build_joint(space, *, workload, datasets, num_steps, population,
                  hw_space, max_lhr, weight_bits, cache, seed, train_budget,
                  strategy, objectives, chunk_size, keep_all, lib, workers,
-                 checkpoint_dir, checkpoint_every) -> Study:
+                 stack, checkpoint_dir, checkpoint_every) -> Study:
     objectives = tuple(objectives) if objectives is not None \
         else DEFAULT_CO_OBJECTIVES
     for obj in objectives:
@@ -933,7 +943,7 @@ def _build_joint(space, *, workload, datasets, num_steps, population,
                      keep_all=keep_all, lib=lib, cache=cache,
                      budget=train_budget, seed=seed, resolve_wl=resolve_wl,
                      model_axes=model_axes, l_max=l_max, workers=workers,
-                     checkpoint_dir=checkpoint_dir,
+                     stack=stack, checkpoint_dir=checkpoint_dir,
                      checkpoint_every=checkpoint_every)
 
     # cells mode: materialize every cell's topology and hardware subspace
@@ -966,7 +976,7 @@ def _build_joint(space, *, workload, datasets, num_steps, population,
                  keep_all=keep_all, lib=lib, cache=cache, budget=train_budget,
                  seed=seed, resolve_wl=resolve_wl, model_axes=model_axes,
                  cell_plan=cell_plan, l_max=l_max, workers=workers,
-                 checkpoint_dir=checkpoint_dir,
+                 stack=stack, checkpoint_dir=checkpoint_dir,
                  checkpoint_every=checkpoint_every)
 
 

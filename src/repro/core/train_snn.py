@@ -79,18 +79,17 @@ def evaluate(cfg: snn.SNNConfig, params: PyTree, x: np.ndarray, y: np.ndarray,
     return correct / max(total, 1)
 
 
-def train(cfg: snn.SNNConfig, data: synthetic.Dataset, *,
-          steps: int = 300, batch_size: int = 64, lr: float = 2e-3,
-          seed: int = 0, log_every: int = 50, verbose: bool = False,
-          matmul_backend: Optional[str] = None) -> TrainResult:
+def make_train_step(cfg: snn.SNNConfig, tx,
+                    matmul_backend: Optional[str] = None):
+    """One SGD step of the training loop as a pure ``(params, opt_state,
+    key, x, y) -> (params, opt_state, loss)`` function — unjitted, so
+    callers can wrap it in ``jax.jit`` directly (the solo loop below) or
+    ``jax.vmap`` it over a leading cell axis first
+    (``distributed.cellstack`` trains whole same-signature cell stacks
+    through this exact function, which is what keeps stacked and solo
+    training bit-identical)."""
     backend = snn.resolve_matmul_backend(matmul_backend)
-    key = jax.random.key(seed)
-    key, pkey = jax.random.split(key)
-    params = snn.init_params(pkey, cfg)
-    tx = optim.adam(lr)
-    opt_state = tx.init(params)
 
-    @jax.jit
     def train_step(params, opt_state, key, x, y):
         loss, grads = jax.value_and_grad(
             lambda p: loss_fn(cfg, p, key, x, y,
@@ -98,6 +97,31 @@ def train(cfg: snn.SNNConfig, data: synthetic.Dataset, *,
         updates, opt_state = tx.update(grads, opt_state, params)
         params = optim.apply_updates(params, updates)
         return params, opt_state, loss
+
+    return train_step
+
+
+def init_cell(cfg: snn.SNNConfig, tx, seed: int):
+    """The exact (params, opt_state, key) chain ``train`` starts from.
+
+    Kept host-side and per-cell on purpose: ``jax.random.normal`` under
+    ``vmap`` draws *different* bits than the solo call, so stacked trainers
+    must initialize each cell through this function and stack the results
+    rather than vmap the initializer (DESIGN.md §14)."""
+    key = jax.random.key(seed)
+    key, pkey = jax.random.split(key)
+    params = snn.init_params(pkey, cfg)
+    return params, tx.init(params), key
+
+
+def train(cfg: snn.SNNConfig, data: synthetic.Dataset, *,
+          steps: int = 300, batch_size: int = 64, lr: float = 2e-3,
+          seed: int = 0, log_every: int = 50, verbose: bool = False,
+          matmul_backend: Optional[str] = None) -> TrainResult:
+    backend = snn.resolve_matmul_backend(matmul_backend)
+    tx = optim.adam(lr)
+    params, opt_state, key = init_cell(cfg, tx, seed)
+    train_step = jax.jit(make_train_step(cfg, tx, backend))
 
     losses = []
     it = synthetic.batches(data.x_train, data.y_train, batch_size,

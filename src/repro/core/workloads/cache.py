@@ -179,6 +179,64 @@ class TraceCache:
             self.misses += 1
             hit = False
 
+        quant, meta = self._extend_quant(cell_dir, workload, cfg, T, params,
+                                         meta, quant_bits)
+        return CellArtifact(
+            workload=workload.name, assignment=norm, key=key, snn_cfg=cfg,
+            params=params, accuracy=float(meta["accuracy"]), counts=counts,
+            quant_acc=quant, cache_hit=hit)
+
+    def publish(self, workload: Workload, assignment: dict, seed: int = 0, *,
+                params, counts: Sequence[np.ndarray], accuracy: float,
+                quant_bits: Sequence[int] = (),
+                budget: Optional[TrainingBudget] = None) -> CellArtifact:
+        """Publish an already-trained cell (the batch hook for stacked
+        trainers, ``repro.distributed.cellstack``).  Semantics mirror
+        ``resolve``: if the cell is already published — e.g. a concurrent
+        trainer won the race — the canonical stored copy is loaded and this
+        counts as a hit (the caller's arrays are dropped; deterministic
+        training makes them identical anyway); otherwise the arrays are
+        written atomically (checkpoint first, ``meta.msgpack`` last), the
+        miss counter increments, and ``budget`` is charged one miss.  The
+        quantized-accuracy table extends exactly as in ``resolve``, so a
+        later solo ``resolve`` of the same recipe is a pure cache hit."""
+        T = int(assignment["num_steps"])
+        pop = float(assignment.get("population", 1.0))
+        norm = {"num_steps": T, "population": pop}
+        key = cell_key(workload, norm, seed)
+        cfg = workload.build(T, pop)
+        cell_dir = os.path.join(self.root, key)
+
+        meta = self._read_meta(cell_dir)
+        if meta is not None:
+            params, counts = self._load_arrays(cell_dir, workload, cfg, T)
+            self.hits += 1
+            hit = True
+        else:
+            if budget is not None:
+                budget.charge()
+            params = jax.tree.map(np.asarray, params)
+            counts = [np.asarray(c, np.float32) for c in counts]
+            meta = {"workload": workload.name, "assignment": norm,
+                    "seed": int(seed), "accuracy": float(accuracy),
+                    "quant_acc": {}}
+            self._write_cell(cell_dir, workload, params, counts, meta)
+            self.misses += 1
+            hit = False
+
+        quant, meta = self._extend_quant(cell_dir, workload, cfg, T, params,
+                                         meta, quant_bits)
+        return CellArtifact(
+            workload=workload.name, assignment=norm, key=key, snn_cfg=cfg,
+            params=params, accuracy=float(meta["accuracy"]),
+            counts=list(counts), quant_acc=quant, cache_hit=hit)
+
+    # ---- internals --------------------------------------------------------
+    def _extend_quant(self, cell_dir: str, workload: Workload,
+                      cfg: snn.SNNConfig, T: int, params, meta: dict,
+                      quant_bits: Sequence[int]) -> tuple[dict, dict]:
+        """Lazily extend the cell's quantized-accuracy table to cover
+        ``quant_bits``; returns the (table, freshest-meta) pair."""
         quant = {int(k): float(v) for k, v in meta["quant_acc"].items()}
         missing = [int(b) for b in quant_bits if int(b) not in quant]
         if missing:
@@ -193,13 +251,8 @@ class TraceCache:
                         for k, v in meta["quant_acc"].items()}, **quant}
             meta["quant_acc"] = {str(b): a for b, a in quant.items()}
             self._write_meta(cell_dir, meta)
+        return quant, meta
 
-        return CellArtifact(
-            workload=workload.name, assignment=norm, key=key, snn_cfg=cfg,
-            params=params, accuracy=float(meta["accuracy"]), counts=counts,
-            quant_acc=quant, cache_hit=hit)
-
-    # ---- internals --------------------------------------------------------
     def _train(self, workload: Workload, cfg: snn.SNNConfig, T: int,
                seed: int):
         data = workload.make_data(T)

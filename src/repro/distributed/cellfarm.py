@@ -6,25 +6,44 @@ same cell race benignly and trainers of *different* cells never interact —
 which makes farming the cell list across worker processes safe without any
 coordination beyond a shared cache root.  This module is that driver: give
 it the pending ``(workload, assignment)`` jobs and a cache root, and it
-round-robins them over ``workers`` spawned processes; afterwards every
-farmed cell resolves as a cache hit in the parent.
+shards them over a spawned-process pool; afterwards every farmed cell
+resolves as a cache hit in the parent.
 
-Workers are spawned (not forked): JAX is not fork-safe once initialized,
-and each worker re-imports the stack and trains on CPU independently.  For
-one or zero pending jobs the farm degrades to in-process resolution — no
-spawn cost for the common all-hits re-run.
+Pool discipline: workers are spawned (not forked — JAX is not fork-safe
+once initialized), the pool size is explicitly capped at
+``min(jobs, cpu_count, MAX_POOL_WORKERS)`` so a 100-cell grid never spawns
+100 interpreters, the pool is REUSED across calls within one process
+(``Study`` steps in one ``explore()`` run share the already-imported
+workers; ``atexit`` tears it down), and job submission is chunked so each
+worker unpickles one slab instead of one job at a time.
 
-``Study``/``dse.explore(..., workers=N)`` and ``dse.coexplore(...,
-workers=N)`` are the front ends (ROADMAP "parallel cell farming").
+``stack=True`` prefers *stacked* training over process farming: jobs are
+grouped by ``cellstack.stack_signature`` and every group that can amortize
+a compile (≥2 cells — or every group, when too few workers make farming
+moot) trains in-process as one ``jit(vmap(train_step))`` batch
+(``repro.distributed.cellstack``); only leftover singletons hit the pool.
+
+``Study``/``dse.explore(..., workers=N, stack=...)`` and ``dse.coexplore``
+are the front ends (ROADMAP "parallel cell farming" / "device-parallel
+training of stacked cells").
 """
 from __future__ import annotations
 
+import atexit
 import dataclasses
 import multiprocessing
+import os
 from typing import Optional, Sequence
 
 from repro.core.workloads.cache import TraceCache
 from repro.core.workloads.registry import Workload
+
+#: hard cap on spawned workers — each is a full interpreter + JAX runtime,
+#: so "one per job" stops paying off long before the CPU count on big hosts
+MAX_POOL_WORKERS = int(os.environ.get("REPRO_CELLFARM_MAX_WORKERS", "8"))
+
+_pool = None
+_pool_size = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,20 +71,88 @@ def _resolve_job(args: tuple[CellJob, str]) -> CellOutcome:
     return CellOutcome(key=art.key, trained=not art.cache_hit)
 
 
+def _worker_count(n_jobs: int, workers: Optional[int]) -> int:
+    """Effective pool size: explicit request, else one per job — both
+    capped at the CPU count and the module-level ``MAX_POOL_WORKERS``."""
+    return min(workers if workers is not None else n_jobs,
+               n_jobs, multiprocessing.cpu_count(), MAX_POOL_WORKERS)
+
+
+def _get_pool(workers: int):
+    """The shared spawn pool, rebuilt only when the requested size changes
+    — repeated ``resolve_cells`` calls (Study steps, prefetch rounds)
+    reuse the already-imported workers instead of paying a fresh
+    interpreter + JAX import per call."""
+    global _pool, _pool_size
+    if _pool is not None and _pool_size != workers:
+        shutdown_pool()
+    if _pool is None:
+        ctx = multiprocessing.get_context("spawn")   # JAX is not fork-safe
+        _pool = ctx.Pool(processes=workers)
+        _pool_size = workers
+    return _pool
+
+
+def shutdown_pool() -> None:
+    """Tear down the shared worker pool (idempotent; re-created lazily)."""
+    global _pool, _pool_size
+    if _pool is not None:
+        _pool.terminate()
+        _pool.join()
+        _pool = None
+        _pool_size = 0
+
+
+atexit.register(shutdown_pool)
+
+
 def resolve_cells(jobs: Sequence[CellJob], root: str,
-                  workers: Optional[int] = None) -> list[CellOutcome]:
-    """Resolve ``jobs`` into the cache at ``root``, training missing cells
-    across up to ``workers`` processes (default: one per job, capped at the
-    CPU count).  Returns one outcome per job, in job order.  The parent's
-    own ``TraceCache`` counters are untouched — count ``trained`` outcomes
-    for miss accounting."""
-    args = [(job, root) for job in jobs]
-    if not args:
+                  workers: Optional[int] = None,
+                  stack: bool = False,
+                  max_stack: Optional[int] = None) -> list[CellOutcome]:
+    """Resolve ``jobs`` into the cache at ``root``; returns one outcome per
+    job, in job order.  ``workers`` bounds the process pool (default: one
+    per job, capped at the CPU count and ``MAX_POOL_WORKERS``).
+
+    ``stack=True`` routes same-signature groups through the in-process
+    vmapped stack trainer first (``cellstack.resolve_stacked``): with a
+    usable pool (≥2 effective workers) only ≥2-cell groups stack and
+    singletons still farm in parallel; without one, everything stacks
+    in-process (a C=1 stack is just the solo loop, minus the spawn).
+
+    The parent's own ``TraceCache`` counters are untouched — count
+    ``trained`` outcomes for miss accounting."""
+    jobs = list(jobs)
+    if not jobs:
         return []
-    workers = min(workers if workers is not None else len(args),
-                  len(args), multiprocessing.cpu_count())
-    if workers <= 1 or len(args) == 1:
-        return [_resolve_job(a) for a in args]
-    ctx = multiprocessing.get_context("spawn")   # JAX is not fork-safe
-    with ctx.Pool(processes=workers) as pool:
-        return pool.map(_resolve_job, args)
+    outcomes: list[Optional[CellOutcome]] = [None] * len(jobs)
+
+    if stack:
+        from repro.distributed import cellstack   # lazy: cellstack imports us
+        groups = cellstack.group_jobs(jobs)
+        if _worker_count(len(jobs), workers) >= 2:
+            stacked_idx = sorted(i for idxs in groups.values()
+                                 if len(idxs) >= 2 for i in idxs)
+        else:
+            stacked_idx = list(range(len(jobs)))
+        if stacked_idx:
+            kw = {} if max_stack is None else {"max_stack": max_stack}
+            got = cellstack.resolve_stacked(
+                [jobs[i] for i in stacked_idx], root, **kw)
+            for i, out in zip(stacked_idx, got):
+                outcomes[i] = out
+
+    farm_idx = [i for i in range(len(jobs)) if outcomes[i] is None]
+    if farm_idx:
+        args = [(jobs[i], root) for i in farm_idx]
+        n = _worker_count(len(args), workers)
+        if n <= 1 or len(args) == 1:
+            got = [_resolve_job(a) for a in args]
+        else:
+            # chunked submission: one slab per worker, not one pickle
+            # round-trip per job
+            chunksize = max(1, (len(args) + n - 1) // n)
+            got = _get_pool(n).map(_resolve_job, args, chunksize=chunksize)
+        for i, out in zip(farm_idx, got):
+            outcomes[i] = out
+    return outcomes

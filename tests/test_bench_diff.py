@@ -85,6 +85,35 @@ def test_suffix_matched_directions(tmp_path):
     assert info and info[0]["direction"] == "info"
 
 
+def test_cells_per_second_suffix(tmp_path):
+    """The cellstack benchmark's throughput fields end in "_per_second"
+    (singular) — they must regress on DROP like "_per_sec" fields, not be
+    mistaken for the lower-is-better "seconds" latency suffix.  The same
+    line's ``stacked_seconds`` / ``compile_seconds`` stay latency-like and
+    ``stack_speedup`` rides the existing "speedup" suffix."""
+    old = tmp_path / "old.json"
+    new = tmp_path / "new.json"
+    _write(old, [{"name": "cellstack/grid", "cells_per_second": 4.0,
+                  "farm_cells_per_second": 1.0, "stack_speedup": 4.0,
+                  "stacked_seconds": 1.0, "compile_seconds": 1.0}])
+    _write(new, [{"name": "cellstack/grid", "cells_per_second": 1.0,
+                  "farm_cells_per_second": 0.25, "stack_speedup": 1.0,
+                  "stacked_seconds": 4.0, "compile_seconds": 4.0}])
+    d = json.loads(_run(str(old), str(new), "--json").stdout)
+    by_field = {c["field"]: c for c in d["changes"]}
+    assert by_field["cells_per_second"]["direction"] == "higher_better"
+    assert by_field["farm_cells_per_second"]["direction"] == "higher_better"
+    assert by_field["stack_speedup"]["direction"] == "higher_better"
+    assert by_field["stacked_seconds"]["direction"] == "lower_better"
+    assert by_field["compile_seconds"]["direction"] == "lower_better"
+    assert {r["field"] for r in d["regressions"]} == {
+        "cells_per_second", "farm_cells_per_second", "stack_speedup",
+        "stacked_seconds", "compile_seconds"}
+    # the mirror run (throughput up, latency down) flags nothing
+    d2 = json.loads(_run(str(new), str(old), "--json").stdout)
+    assert d2["n_regressions"] == 0
+
+
 def test_threshold_and_duplicate_names(tmp_path):
     old = tmp_path / "old.json"
     new = tmp_path / "new.json"

@@ -29,7 +29,10 @@ import sys
 #: "skip_fraction" covers the kernels suite's ``skip_fraction`` and
 #: ``bwd_skip_fraction`` (tiles the sparsity-aware fwd/bwd kernels skip);
 #: ``skip_fraction_profiled`` ends in "_profiled" and stays informational.
-HIGHER_IS_BETTER = ("_per_sec", "speedup", "skip_fraction")
+#: "_per_second" covers the cell-throughput fields ("cells_per_second",
+#: "farm_cells_per_second") — singular "second", so it never collides with
+#: the LOWER_IS_BETTER "seconds" latency suffix checked first below.
+HIGHER_IS_BETTER = ("_per_sec", "_per_second", "speedup", "skip_fraction")
 #: field-name suffixes where SMALLER is better (regression = growth) —
 #: covers "seconds" ("repeat_seconds", per-backend "*_fwd_seconds" /
 #: "*_bwd_seconds" / "*_step_seconds"), "rss_mb", ...
