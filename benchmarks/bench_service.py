@@ -1,0 +1,91 @@
+"""Multi-tenant DSE service benchmark: two tenants submit overlapping
+co-exploration studies to one ``DSEService`` over a shared trace cache.
+
+What the BENCH lines measure (all tracked by ``tools/bench_diff.py``):
+
+* ``studies_per_second`` — end-to-end study throughput of the cooperative
+  scheduler (admission -> interleaved ``Study.step()`` rounds ->
+  completion), training included.
+* ``events_per_second`` — typed-protocol event emission rate (frontier
+  updates + progress + lifecycle), the streaming-side cost.
+* ``cache_hit_rate`` — the cross-tenant deduplication measure: tenant B's
+  cells overlap tenant A's, so with one shared content-addressed cache
+  every overlapping cell trains exactly once and B resolves hits.  A drop
+  means tenants started retraining each other's cells.
+
+The run also *asserts* the dedup contract (misses == distinct cells) and
+that both tenants' frontiers are identical — the overlap is total, so
+tenant B's study is a pure cache-replay of tenant A's.
+"""
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+import time
+
+from benchmarks.common import emit_json
+from repro.core import snn, workloads
+from repro.serve import DSEService, FrontierUpdate, Submission
+
+
+def _workload(quick: bool) -> workloads.Workload:
+    base = workloads.get("mnist-mlp")
+    return dataclasses.replace(
+        base, name="bench-service-mlp",
+        layers=(snn.Dense(24 if quick else 48),),
+        pcr=2, n_train=256 if quick else 768, n_test=128,
+        train_steps=20 if quick else 80, trace_samples=32)
+
+
+def run(quick: bool = False):
+    wl = _workload(quick)
+    t_values = (2, 3) if quick else (2, 4, 8)
+    pops = (0.5, 1.0) if quick else (0.5, 1.0, 2.0)
+    n_cells = len(t_values) * len(pops)
+    kwargs = dict(workload=wl, num_steps=t_values, population=pops,
+                  max_lhr=4 if quick else 8, weight_bits=(4, 8),
+                  chunk_size=4096)
+
+    with tempfile.TemporaryDirectory() as root:
+        cache = workloads.TraceCache(root=f"{root}/cells")
+        service = DSEService(cache, max_active=2)
+        t0 = time.perf_counter()
+        handles = [service.submit(Submission(tenant=t, name="sweep",
+                                             **kwargs))
+                   for t in ("tenant-a", "tenant-b")]
+        service.run_until_idle()
+        dt = time.perf_counter() - t0
+
+        stats = service.stats
+        events = {h.study_id: h.events() for h in handles}
+        n_events = sum(len(v) for v in events.values())
+        n_frontier = sum(1 for v in events.values() for e in v
+                        if isinstance(e, FrontierUpdate))
+        emit_json("service/two_tenant",
+                  tenants=2, cells_per_tenant=n_cells,
+                  completed=stats["completed"],
+                  cache_hits=stats["cache"]["hits"],
+                  cache_misses=stats["cache"]["misses"],
+                  cache_hit_rate=round(stats["cache"]["hit_rate"], 4),
+                  events=n_events, frontier_updates=n_frontier,
+                  seconds=round(dt, 2),
+                  studies_per_second=round(stats["completed"]
+                                           / max(dt, 1e-9), 3),
+                  events_per_second=round(n_events / max(dt, 1e-9), 1))
+
+        if stats["completed"] != 2:
+            raise AssertionError(f"expected 2 completed studies, got "
+                                 f"{stats['completed']} ({stats})")
+        if cache.misses != n_cells:
+            raise AssertionError(
+                f"cross-tenant dedup violated: {cache.misses} training "
+                f"runs for {n_cells} distinct cells")
+        fa, fb = (h.frontier for h in handles)
+        if len(fa) != len(fb):
+            raise AssertionError(
+                f"identical submissions diverged: frontier sizes "
+                f"{len(fa)} vs {len(fb)}")
+
+
+if __name__ == "__main__":
+    run()

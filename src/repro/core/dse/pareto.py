@@ -129,9 +129,12 @@ class ParetoAccumulator:
         self._table: Optional[CandidateTable] = None
         self._obj: Optional[np.ndarray] = None               # (F, K)
 
-    def update(self, table: CandidateTable) -> None:
+    def update(self, table: CandidateTable) -> bool:
+        """Merge one chunk; returns True when the frontier changed (rows
+        added and/or dominated rows dropped) — the signal streaming
+        frontier consumers (``repro.serve.dse_service``) key events on."""
         if len(table) == 0:
-            return
+            return False
         obj = np.stack([np.asarray(table.columns[k], np.float64)
                         for k in self.objectives], axis=1)
         idx = np.flatnonzero(~any_dominates(self._obj, obj))
@@ -149,11 +152,13 @@ class ParetoAccumulator:
         sub = obj[idx]
         if self._table is None:
             self._table, self._obj = table.take(idx), sub
-            return
+            return len(idx) > 0
         old_keep = ~any_dominates(sub, self._obj)
+        changed = len(idx) > 0 or not old_keep.all()
         self._table = CandidateTable.concat(
             [self._table.take(old_keep), table.take(idx)])
         self._obj = np.concatenate([self._obj[old_keep], sub])
+        return changed
 
     @property
     def frontier(self) -> CandidateTable:

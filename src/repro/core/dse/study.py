@@ -267,6 +267,13 @@ class Study(FrontierQueries):
         self.cells: list[CellRecord] = []
         self.skipped: list[dict] = []
         self.farmed_misses = 0
+        #: bumped whenever the Pareto frontier actually changes — streaming
+        #: consumers (repro.serve.dse_service) diff this across steps
+        #: instead of comparing frontier tables
+        self.frontier_version = 0
+        #: cooperative-stepping hooks: each is called as ``fn(study)`` after
+        #: every counted step (and never after the terminal False step)
+        self.listeners: list[Callable[["Study"], None]] = []
         self._acc = ParetoAccumulator(self.objectives)
         self._kept: Optional[list[CandidateTable]] = [] if keep_all else None
         self._table: Optional[CandidateTable] = None
@@ -338,6 +345,8 @@ class Study(FrontierQueries):
             advanced = self._step_ask_tell()
         if advanced:
             self.rounds += 1
+            for fn in self.listeners:
+                fn(self)
         else:
             self.done = True
         return advanced
@@ -359,7 +368,8 @@ class Study(FrontierQueries):
                          for k in self.objectives], axis=1)
 
     def _accumulate(self, chunk: CandidateTable) -> None:
-        self._acc.update(chunk)
+        if self._acc.update(chunk):
+            self.frontier_version += 1
         if self._kept is not None:
             self._kept.append(chunk)
         self.n_evaluated += len(chunk)
@@ -515,6 +525,13 @@ class Study(FrontierQueries):
 
     def _charge_farmed(self, outcomes: list) -> None:
         for out in outcomes:
+            if out.error is not None:
+                # the farm gave up on this cell after bounded retries
+                # (cellfarm.CellOutcome.error); nothing was published and
+                # nothing is charged — the serial resolution path below
+                # trains it in-process (or skips it for budget) instead of
+                # the whole study dying on one bad worker
+                continue
             if out.trained:
                 self.farmed_misses += 1
                 if self.budget is not None:
@@ -698,8 +715,8 @@ class Study(FrontierQueries):
         cols = {k: np.asarray(v) for k, v in tree["frontier"].items()}
         for k, vals in meta["frontier"]["strings"].items():
             cols[k] = np.asarray(vals)
-        if cols:
-            self._acc.update(CandidateTable(cols))
+        if cols and self._acc.update(CandidateTable(cols)):
+            self.frontier_version += 1
         self.done = bool(meta["done"])
         self.n_evaluated = int(meta["n_evaluated"])
         self.rounds = int(meta["rounds"])

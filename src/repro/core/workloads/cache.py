@@ -35,6 +35,7 @@ import dataclasses
 import hashlib
 import json
 import os
+import threading
 from typing import Any, Optional, Sequence
 
 import jax
@@ -67,34 +68,64 @@ class TrainingBudget:
     *before* training starts, so an exhausted budget fails fast instead of
     after minutes of wasted work.  NAS-style drivers (``dse.explore``) probe
     ``can_spend`` + ``TraceCache.contains`` to *skip* unaffordable cells
-    gracefully rather than raise."""
+    gracefully rather than raise.
+
+    Thread-safe: one lock guards every check-and-charge, so concurrent
+    tenant studies (``repro.serve.dse_service`` maps per-tenant quotas onto
+    one shared budget) never double-spend the last unit — ``try_charge`` is
+    the atomic check+charge for callers that must not race.  Only the
+    lock-free counters round-trip through ``state_dict``/pickle; the lock
+    is rebuilt on load, so checkpointed budgets restore across processes.
+    """
 
     def __init__(self, limit: int):
         if limit < 0:
             raise ValueError(f"budget limit must be >= 0, got {limit}")
         self.limit = int(limit)
         self.spent = 0
+        self._lock = threading.Lock()
 
     @property
     def remaining(self) -> int:
         return self.limit - self.spent
 
     def can_spend(self, n: int = 1) -> bool:
-        return self.spent + n <= self.limit
+        with self._lock:
+            return self.spent + n <= self.limit
 
     def charge(self, n: int = 1) -> None:
-        if not self.can_spend(n):
+        if not self.try_charge(n):
             raise BudgetExceeded(
                 f"training budget exhausted: {self.spent}/{self.limit} "
                 f"misses spent, cannot charge {n} more")
-        self.spent += n
+
+    def try_charge(self, n: int = 1) -> bool:
+        """Atomically charge ``n`` misses iff affordable; False otherwise
+        (the race-free form of ``can_spend`` + ``charge``)."""
+        with self._lock:
+            if self.spent + n > self.limit:
+                return False
+            self.spent += n
+            return True
 
     def state_dict(self) -> dict:
-        return {"limit": self.limit, "spent": self.spent}
+        with self._lock:
+            return {"limit": self.limit, "spent": self.spent}
 
     def load_state_dict(self, state: dict) -> None:
+        with self._lock:
+            self.limit = int(state["limit"])
+            self.spent = int(state["spent"])
+
+    # the lock never crosses a process boundary: pickling (e.g. inside a
+    # farmed job's closure) ships the counters and rebuilds a fresh lock
+    def __getstate__(self) -> dict:
+        return self.state_dict()
+
+    def __setstate__(self, state: dict) -> None:
         self.limit = int(state["limit"])
         self.spent = int(state["spent"])
+        self._lock = threading.Lock()
 
 
 def cell_key(workload: Workload, assignment: dict, seed: int) -> str:

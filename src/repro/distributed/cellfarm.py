@@ -26,21 +26,38 @@ moot) trains in-process as one ``jit(vmap(train_step))`` batch
 ``Study``/``dse.explore(..., workers=N, stack=...)`` and ``dse.coexplore``
 are the front ends (ROADMAP "parallel cell farming" / "device-parallel
 training of stacked cells").
+
+Fault containment: ``resolve_cells`` never raises on a bad cell — worker
+exceptions return as failed ``CellOutcome``\\ s, a hard pool crash tears
+down and rebuilds the pool, and both are retried up to ``MAX_RETRIES``
+rounds (the ``distributed.fault_tolerance`` restart idiom) before the
+failure ships in ``CellOutcome.error`` for the caller to fall back on —
+required by the multi-tenant service loop (``repro.serve.dse_service``),
+where one tenant's bad cell must not kill another tenant's study.
 """
 from __future__ import annotations
 
 import atexit
 import dataclasses
+import logging
 import multiprocessing
 import os
 from typing import Optional, Sequence
 
-from repro.core.workloads.cache import TraceCache
+from repro.core.workloads.cache import TraceCache, cell_key
 from repro.core.workloads.registry import Workload
+
+log = logging.getLogger(__name__)
 
 #: hard cap on spawned workers — each is a full interpreter + JAX runtime,
 #: so "one per job" stops paying off long before the CPU count on big hosts
 MAX_POOL_WORKERS = int(os.environ.get("REPRO_CELLFARM_MAX_WORKERS", "8"))
+
+#: bounded-retry budget for failed cells (the ``fault_tolerance``
+#: supervisor's restart idiom): a crashed worker or a raising job is
+#: retried this many extra rounds before its outcome ships with ``error``
+#: set — it never raises through the caller (``Study._farm_chunk``)
+MAX_RETRIES = int(os.environ.get("REPRO_CELLFARM_MAX_RETRIES", "2"))
 
 _pool = None
 _pool_size = 0
@@ -59,16 +76,34 @@ class CellJob:
 class CellOutcome:
     key: str                       # content address in the shared cache
     trained: bool                  # True = this worker trained it (a miss)
+    #: set when the cell could not be resolved after ``MAX_RETRIES`` retry
+    #: rounds — the cache holds nothing for it and nothing was charged;
+    #: callers fall back to in-process resolution (or skip)
+    error: Optional[str] = None
+
+
+def _job_key(job: CellJob) -> str:
+    norm = {"num_steps": int(job.assignment["num_steps"]),
+            "population": float(job.assignment.get("population", 1.0))}
+    return cell_key(job.workload, norm, job.seed)
 
 
 def _resolve_job(args: tuple[CellJob, str]) -> CellOutcome:
     """Worker entry point: resolve one cell against the shared cache root.
-    Module-level so the spawn pickler can import it by reference."""
+    Module-level so the spawn pickler can import it by reference.  Any
+    job-level failure is *returned* as a failed outcome, never raised — a
+    worker must not poison the whole slab it was mapped."""
     job, root = args
-    cache = TraceCache(root=root)
-    art = cache.resolve(job.workload, job.assignment, seed=job.seed,
-                        quant_bits=job.quant_bits)
-    return CellOutcome(key=art.key, trained=not art.cache_hit)
+    try:
+        cache = TraceCache(root=root)
+        art = cache.resolve(job.workload, job.assignment, seed=job.seed,
+                            quant_bits=job.quant_bits)
+        return CellOutcome(key=art.key, trained=not art.cache_hit)
+    except KeyboardInterrupt:
+        raise
+    except BaseException as e:                           # noqa: BLE001
+        return CellOutcome(key=_job_key(job), trained=False,
+                           error=f"{type(e).__name__}: {e}")
 
 
 def _worker_count(n_jobs: int, workers: Optional[int]) -> int:
@@ -106,10 +141,34 @@ def shutdown_pool() -> None:
 atexit.register(shutdown_pool)
 
 
+def _farm_attempt(args: Sequence[tuple[CellJob, str]],
+                  workers: Optional[int]) -> list[CellOutcome]:
+    """One farming round.  Job-level failures come back as failed outcomes
+    from ``_resolve_job``; a *pool*-level crash (a worker process died hard
+    enough to break the map) marks every in-flight job failed and tears the
+    poisoned pool down, so the next attempt gets a fresh one."""
+    args = list(args)
+    n = _worker_count(len(args), workers)
+    if n <= 1 or len(args) == 1:
+        return [_resolve_job(a) for a in args]
+    # chunked submission: one slab per worker, not one pickle round-trip
+    # per job
+    chunksize = max(1, (len(args) + n - 1) // n)
+    try:
+        return _get_pool(n).map(_resolve_job, args, chunksize=chunksize)
+    except Exception as e:                               # noqa: BLE001
+        shutdown_pool()
+        err = f"worker pool crashed: {type(e).__name__}: {e}"
+        log.warning("%s (%d cell(s) in flight)", err, len(args))
+        return [CellOutcome(key=_job_key(job), trained=False, error=err)
+                for job, _ in args]
+
+
 def resolve_cells(jobs: Sequence[CellJob], root: str,
                   workers: Optional[int] = None,
                   stack: bool = False,
-                  max_stack: Optional[int] = None) -> list[CellOutcome]:
+                  max_stack: Optional[int] = None,
+                  retries: Optional[int] = None) -> list[CellOutcome]:
     """Resolve ``jobs`` into the cache at ``root``; returns one outcome per
     job, in job order.  ``workers`` bounds the process pool (default: one
     per job, capped at the CPU count and ``MAX_POOL_WORKERS``).
@@ -120,11 +179,19 @@ def resolve_cells(jobs: Sequence[CellJob], root: str,
     singletons still farm in parallel; without one, everything stacks
     in-process (a C=1 stack is just the solo loop, minus the spawn).
 
+    This function **never raises on a bad cell**: a crashed worker, a
+    poisoned pool, or a job that errors is retried up to ``retries``
+    (default ``MAX_RETRIES``) extra rounds — the ``fault_tolerance``
+    restart idiom — and then returned with ``CellOutcome.error`` set, so
+    one bad cell cannot kill a study or a service loop.  A failed stack
+    group degrades to farming before counting as a retry.
+
     The parent's own ``TraceCache`` counters are untouched — count
     ``trained`` outcomes for miss accounting."""
     jobs = list(jobs)
     if not jobs:
         return []
+    retries = MAX_RETRIES if retries is None else int(retries)
     outcomes: list[Optional[CellOutcome]] = [None] * len(jobs)
 
     if stack:
@@ -137,22 +204,34 @@ def resolve_cells(jobs: Sequence[CellJob], root: str,
             stacked_idx = list(range(len(jobs)))
         if stacked_idx:
             kw = {} if max_stack is None else {"max_stack": max_stack}
-            got = cellstack.resolve_stacked(
-                [jobs[i] for i in stacked_idx], root, **kw)
-            for i, out in zip(stacked_idx, got):
-                outcomes[i] = out
+            try:
+                got = cellstack.resolve_stacked(
+                    [jobs[i] for i in stacked_idx], root, **kw)
+            except Exception as e:                       # noqa: BLE001
+                # a failed in-process stack is not fatal: the cells fall
+                # through to the farm/serial path below untouched
+                log.warning("stacked training failed (%s: %s); falling "
+                            "back to farming %d cell(s)",
+                            type(e).__name__, e, len(stacked_idx))
+            else:
+                for i, out in zip(stacked_idx, got):
+                    outcomes[i] = out
 
-    farm_idx = [i for i in range(len(jobs)) if outcomes[i] is None]
-    if farm_idx:
-        args = [(jobs[i], root) for i in farm_idx]
-        n = _worker_count(len(args), workers)
-        if n <= 1 or len(args) == 1:
-            got = [_resolve_job(a) for a in args]
-        else:
-            # chunked submission: one slab per worker, not one pickle
-            # round-trip per job
-            chunksize = max(1, (len(args) + n - 1) // n)
-            got = _get_pool(n).map(_resolve_job, args, chunksize=chunksize)
-        for i, out in zip(farm_idx, got):
+    pending = [i for i in range(len(jobs)) if outcomes[i] is None]
+    attempt = 0
+    while pending:
+        got = _farm_attempt([(jobs[i], root) for i in pending], workers)
+        for i, out in zip(pending, got):
             outcomes[i] = out
+        pending = [i for i in pending if outcomes[i].error is not None]
+        if not pending:
+            break
+        attempt += 1
+        if attempt > retries:
+            log.warning("giving up on %d cell(s) after %d retry round(s): "
+                        "%s", len(pending), retries,
+                        [outcomes[i].error for i in pending[:3]])
+            break
+        log.warning("retrying %d failed cell(s), round %d/%d",
+                    len(pending), attempt, retries)
     return outcomes

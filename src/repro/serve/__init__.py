@@ -1,0 +1,20 @@
+"""Serving layer: the LM serving engine (``repro.serve.engine``) and the
+multi-tenant DSE service (``repro.serve.dse_service`` — DESIGN.md §15).
+
+The engine stays a submodule import (``from repro.serve import engine``)
+because it pulls the full model registry; the DSE service surface is
+re-exported here.
+"""
+from repro.serve.dse_service import DSEService, StudyHandle
+from repro.serve.protocol import (EVENT_KINDS, TERMINAL_EVENTS, Event,
+                                  FrontierUpdate, Progress, StudyAccepted,
+                                  StudyCompleted, StudyEvicted, StudyFailed,
+                                  StudyRejected, StudyStarted, Submission,
+                                  from_wire, is_terminal, to_wire)
+
+__all__ = [
+    "DSEService", "EVENT_KINDS", "Event", "FrontierUpdate", "Progress",
+    "StudyAccepted", "StudyCompleted", "StudyEvicted", "StudyFailed",
+    "StudyHandle", "StudyRejected", "StudyStarted", "Submission",
+    "TERMINAL_EVENTS", "from_wire", "is_terminal", "to_wire",
+]

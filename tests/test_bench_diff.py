@@ -114,6 +114,29 @@ def test_cells_per_second_suffix(tmp_path):
     assert d2["n_regressions"] == 0
 
 
+def test_hit_rate_suffix(tmp_path):
+    """The service benchmark's cross-tenant ``cache_hit_rate`` ends in
+    "_hit_rate" — a DROP regresses (tenants stopped deduplicating each
+    other's training), while its sibling throughput fields keep their
+    existing suffixes."""
+    old = tmp_path / "old.json"
+    new = tmp_path / "new.json"
+    _write(old, [{"name": "service/two_tenant", "cache_hit_rate": 0.5,
+                  "studies_per_second": 2.0, "events_per_second": 50.0}])
+    _write(new, [{"name": "service/two_tenant", "cache_hit_rate": 0.1,
+                  "studies_per_second": 0.5, "events_per_second": 10.0}])
+    d = json.loads(_run(str(old), str(new), "--json").stdout)
+    by_field = {c["field"]: c for c in d["changes"]}
+    assert by_field["cache_hit_rate"]["direction"] == "higher_better"
+    assert by_field["studies_per_second"]["direction"] == "higher_better"
+    assert by_field["events_per_second"]["direction"] == "higher_better"
+    assert {r["field"] for r in d["regressions"]} == {
+        "cache_hit_rate", "studies_per_second", "events_per_second"}
+    # the mirror run (rate and throughput both up) flags nothing
+    d2 = json.loads(_run(str(new), str(old), "--json").stdout)
+    assert d2["n_regressions"] == 0
+
+
 def test_threshold_and_duplicate_names(tmp_path):
     old = tmp_path / "old.json"
     new = tmp_path / "new.json"

@@ -32,7 +32,11 @@ import sys
 #: "_per_second" covers the cell-throughput fields ("cells_per_second",
 #: "farm_cells_per_second") — singular "second", so it never collides with
 #: the LOWER_IS_BETTER "seconds" latency suffix checked first below.
-HIGHER_IS_BETTER = ("_per_sec", "_per_second", "speedup", "skip_fraction")
+#: "_hit_rate" covers the service suite's cross-tenant "cache_hit_rate"
+#: (shared-cache dedup: a drop means tenants started retraining each
+#: other's cells).
+HIGHER_IS_BETTER = ("_per_sec", "_per_second", "speedup", "skip_fraction",
+                    "_hit_rate")
 #: field-name suffixes where SMALLER is better (regression = growth) —
 #: covers "seconds" ("repeat_seconds", per-backend "*_fwd_seconds" /
 #: "*_bwd_seconds" / "*_step_seconds"), "rss_mb", ...
