@@ -1,0 +1,101 @@
+"""Elastic cell-fleet benchmark: workers drain a spooled study through the
+shared-cache lease protocol (``repro.distributed.fleet``).
+
+What the BENCH lines measure (tracked by ``tools/bench_diff.py``):
+
+* ``cells_per_second`` — fleet-side cell throughput: wall-clock from
+  "jobs spooled" to "every cell published", with two in-process
+  ``FleetWorker``\\ s draining the queue (threads, not spawned
+  interpreters — the lease/spool machinery is what's under test, and a
+  JAX import per worker would drown it).
+* ``lease_takeovers`` — every cell starts under a *stale* lease left by
+  a simulated dead fleet, so the workers must break and reclaim each one
+  before training; the count asserts the takeover path runs at benchmark
+  scale, not just in unit tests.
+* ``cache_hit_rate`` — dedup measure: a second pass over the same study
+  resolves every cell from the shared cache.  A drop below 1.0 means the
+  fleet trained a cell the cache should have served.
+
+The run also *asserts* the contract: the fleet trains each cell exactly
+once (``sum(cells_trained) == n_cells``, zero failures), every stale
+lease is taken over, and the replay pass is all hits.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+import threading
+import time
+
+from benchmarks.common import emit_json
+from repro.core import snn, workloads
+from repro.distributed import cellfarm, fleet
+
+
+def _workload(quick: bool) -> workloads.Workload:
+    base = workloads.get("mnist-mlp")
+    return dataclasses.replace(
+        base, name="bench-fleet-mlp",
+        layers=(snn.Dense(16 if quick else 32),),
+        pcr=1, n_train=128 if quick else 512, n_test=64,
+        train_steps=4 if quick else 40, trace_samples=16)
+
+
+def run(quick: bool = False):
+    wl = _workload(quick)
+    t_values = (2, 3) if quick else (2, 3, 4)
+    pops = (0.5, 1.0)
+    jobs = [cellfarm.CellJob(workload=wl,
+                             assignment={"num_steps": t, "population": p})
+            for t in t_values for p in pops]
+    n_cells = len(jobs)
+    n_workers = 2
+
+    with tempfile.TemporaryDirectory() as root:
+        # a dead fleet's leftovers: one stale lease per cell, heartbeat
+        # an hour past — every claim must go through the takeover path
+        old = time.time() - 3600.0
+        for job in jobs:
+            lease = fleet.acquire(root, cellfarm._job_key(job), "w-dead")
+            os.utime(lease.path, (old, old))
+        fleet.spool(root, jobs)
+
+        members = [fleet.FleetWorker(root, worker_id=f"bench-w{i}",
+                                     poll=0.01)
+                   for i in range(n_workers)]
+        threads = [threading.Thread(target=w.run,
+                                    kwargs=dict(idle_timeout=0.5))
+                   for w in members]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        out = fleet.resolve_cluster(jobs, root, timeout=600.0)
+        dt = time.perf_counter() - t0
+        for t in threads:
+            t.join()
+
+        trained = sum(w.stats["cells_trained"] for w in members)
+        failed = sum(w.stats["cells_failed"] for w in members)
+        takeovers = sum(w.stats["lease_takeovers"] for w in members)
+        assert [o.error for o in out] == [None] * n_cells
+        assert trained == n_cells and failed == 0, (trained, failed)
+        assert takeovers == n_cells, takeovers
+
+        # dedup replay: the whole study again, straight from the cache
+        cache = workloads.TraceCache(root=root)
+        for job in jobs:
+            art = cache.resolve(job.workload, job.assignment, seed=job.seed)
+            assert art.cache_hit
+        hit_rate = cache.hits / (cache.hits + cache.misses)
+        assert hit_rate == 1.0, cache.stats
+
+        emit_json("fleet/two_worker_drain",
+                  cells=n_cells, workers=n_workers,
+                  cells_per_second=round(n_cells / dt, 4),
+                  lease_takeovers=takeovers,
+                  cache_hit_rate=round(hit_rate, 4))
+
+
+if __name__ == "__main__":
+    run(quick=True)

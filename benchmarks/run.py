@@ -20,13 +20,13 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma-separated subset: table1,fig1,fig6,fig7,"
                          "kernels,ext,dse,coexplore,explore,cellstack,"
-                         "service")
+                         "service,fleet")
     args = ap.parse_args()
 
     from benchmarks import (bench_cellstack, bench_coexplore, bench_dse,
                             bench_explore, bench_extensions, bench_fig1,
-                            bench_fig6, bench_fig7, bench_kernels,
-                            bench_service, bench_table1)
+                            bench_fig6, bench_fig7, bench_fleet,
+                            bench_kernels, bench_service, bench_table1)
     suites = {
         "table1": bench_table1.run,
         "fig1": bench_fig1.run,
@@ -39,6 +39,7 @@ def main() -> None:
         "explore": bench_explore.run,
         "cellstack": bench_cellstack.run,
         "service": bench_service.run,
+        "fleet": bench_fleet.run,
     }
     selected = [s.strip() for s in args.only.split(",") if s.strip()] or \
         list(suites)

@@ -236,7 +236,7 @@ class Study(FrontierQueries):
                  model_axes: Optional[list[tuple]] = None,
                  cell_plan: Optional[list[tuple]] = None,
                  l_max: int = 0,
-                 workers: int = 0,
+                 workers: Union[int, str] = 0,
                  stack: bool = False,
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every: Optional[int] = None):
@@ -490,11 +490,20 @@ class Study(FrontierQueries):
                          accuracy=artifact.accuracy,
                          quant_acc=dict(artifact.quant_acc))
 
+    @property
+    def _farming(self) -> bool:
+        """True when pending cells should resolve out-of-process first: a
+        usable process pool (``workers >= 2``), the fleet
+        (``workers="cluster"``), or in-process stacking."""
+        return (self.workers == "cluster" or self.stack
+                or (isinstance(self.workers, int) and self.workers >= 2))
+
     def _farm_chunk(self, uniq_model_rows: np.ndarray) -> None:
         """Train this chunk's unresolved, affordable cells across worker
-        processes — or as vmapped same-signature stacks with ``stack=True``
-        — before the serial resolution loop (joint mode)."""
-        if self.workers < 2 and not self.stack:
+        processes — vmapped same-signature stacks with ``stack=True``, or
+        the lease-coordinated fleet with ``workers="cluster"`` — before
+        the serial resolution loop (joint mode)."""
+        if not self._farming:
             return
         jobs, keys = [], []
         afford = (self.budget.remaining if self.budget is not None
@@ -586,9 +595,10 @@ class Study(FrontierQueries):
 
     def _prefetch_cells(self) -> None:
         """Farm the cell plan's pending training across worker processes —
-        or vmapped same-signature stacks with ``stack=True`` (cells mode);
-        afterwards every prefetched cell resolves as a hit."""
-        if self._prefetched or (self.workers < 2 and not self.stack):
+        vmapped same-signature stacks with ``stack=True``, or the fleet
+        with ``workers="cluster"`` (cells mode); afterwards every
+        prefetched cell resolves as a hit."""
+        if self._prefetched or not self._farming:
             return
         self._prefetched = True
         jobs = []
@@ -769,7 +779,7 @@ def explore(space: Optional[SearchSpace] = None, *,
             keep_all: bool = False,
             lib: Optional[resources.CostLibrary] = None,
             # study lifecycle
-            workers: int = 0,
+            workers: Union[int, str] = 0,
             stack: bool = False,
             checkpoint_dir: Optional[str] = None,
             checkpoint_every: Optional[int] = None,
@@ -788,14 +798,22 @@ def explore(space: Optional[SearchSpace] = None, *,
 
     ``checkpoint_dir`` + ``checkpoint_every=n`` checkpoint the study every n
     steps; ``resume=True`` restores from ``checkpoint_dir`` and continues.
-    ``workers=N`` trains pending cells across N processes; ``stack=True``
-    prefers batching same-signature cells into one vmapped device-resident
-    stack over farming them (``repro.distributed.cellstack`` — published
-    cells are bit-identical to solo training either way).  ``run=False``
-    returns the un-run study for manual ``step()``-ing.
+    ``workers=N`` trains pending cells across N processes;
+    ``workers="cluster"`` spools them to the shared cache root's job queue
+    for any enrolled ``fleet.FleetWorker`` — on this or any other host —
+    to claim by lease (``repro.distributed.fleet``; blocks on fleet
+    progress with an in-process fallback, so it completes with zero live
+    workers too).  ``stack=True`` prefers batching same-signature cells
+    into one vmapped device-resident stack over farming them
+    (``repro.distributed.cellstack`` — published cells are bit-identical
+    to solo training either way).  ``run=False`` returns the un-run study
+    for manual ``step()``-ing.
     """
     if chunk_size < 1:
         raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    if isinstance(workers, str) and workers != "cluster":
+        raise ValueError(f"workers must be an int or 'cluster', "
+                         f"got {workers!r}")
     if isinstance(strategy, str):
         if strategy != "grid":
             raise ValueError(f"unknown strategy name {strategy!r}; pass a "

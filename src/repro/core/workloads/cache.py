@@ -34,6 +34,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import logging
 import os
 import threading
 from typing import Any, Optional, Sequence
@@ -47,8 +48,13 @@ from repro.checkpoint import store
 from repro.core import encoding, snn, train_snn, validate
 from repro.core.workloads.registry import Workload
 
+log = logging.getLogger(__name__)
+
 _META = "meta.msgpack"
 _QUANT_SAMPLES = 64          # test samples for the fixed-point accuracy leg
+
+#: meta paths already reported corrupt (quarantine logs once per path)
+_quarantined: set[str] = set()
 
 
 def default_root() -> str:
@@ -87,7 +93,10 @@ class TrainingBudget:
 
     @property
     def remaining(self) -> int:
-        return self.limit - self.spent
+        # locked like every other accessor: an unlocked limit - spent can
+        # tear against a concurrent load_state_dict swapping both fields
+        with self._lock:
+            return self.limit - self.spent
 
     def can_spend(self, n: int = 1) -> bool:
         with self._lock:
@@ -98,6 +107,14 @@ class TrainingBudget:
             raise BudgetExceeded(
                 f"training budget exhausted: {self.spent}/{self.limit} "
                 f"misses spent, cannot charge {n} more")
+
+    def refund(self, n: int = 1) -> None:
+        """Return ``n`` charged-but-unspent units (a training run that was
+        charged up front and then failed — ``TraceCache.resolve`` refunds
+        on the failure path so the unit is not silently lost).  Clamped at
+        zero: a refund can never manufacture budget."""
+        with self._lock:
+            self.spent = max(0, self.spent - int(n))
 
     def try_charge(self, n: int = 1) -> bool:
         """Atomically charge ``n`` misses iff affordable; False otherwise
@@ -176,6 +193,12 @@ class TraceCache:
         key = cell_key(workload, norm, seed)
         return self._read_meta(os.path.join(self.root, key)) is not None
 
+    def contains_key(self, key: str) -> bool:
+        """``contains`` for callers that already hold the content address
+        (the fleet's lease/spool machinery tracks cells by key alone).
+        Same semantics: complete, readable meta == published."""
+        return self._read_meta(os.path.join(self.root, key)) is not None
+
     def resolve(self, workload: Workload, assignment: dict, seed: int = 0,
                 quant_bits: Sequence[int] = (),
                 budget: Optional[TrainingBudget] = None) -> CellArtifact:
@@ -202,11 +225,19 @@ class TraceCache:
         else:
             if budget is not None:
                 budget.charge()
-            params, counts, accuracy = self._train(workload, cfg, T, seed)
-            meta = {"workload": workload.name, "assignment": norm,
-                    "seed": int(seed), "accuracy": float(accuracy),
-                    "quant_acc": {}}
-            self._write_cell(cell_dir, workload, params, counts, meta)
+            try:
+                params, counts, accuracy = self._train(workload, cfg, T,
+                                                       seed)
+                meta = {"workload": workload.name, "assignment": norm,
+                        "seed": int(seed), "accuracy": float(accuracy),
+                        "quant_acc": {}}
+                self._write_cell(cell_dir, workload, params, counts, meta)
+            except BaseException:
+                # the charge landed before training; a failed run spent
+                # nothing, so hand the unit back instead of leaking it
+                if budget is not None:
+                    budget.refund()
+                raise
             self.misses += 1
             hit = False
 
@@ -246,12 +277,17 @@ class TraceCache:
         else:
             if budget is not None:
                 budget.charge()
-            params = jax.tree.map(np.asarray, params)
-            counts = [np.asarray(c, np.float32) for c in counts]
-            meta = {"workload": workload.name, "assignment": norm,
-                    "seed": int(seed), "accuracy": float(accuracy),
-                    "quant_acc": {}}
-            self._write_cell(cell_dir, workload, params, counts, meta)
+            try:
+                params = jax.tree.map(np.asarray, params)
+                counts = [np.asarray(c, np.float32) for c in counts]
+                meta = {"workload": workload.name, "assignment": norm,
+                        "seed": int(seed), "accuracy": float(accuracy),
+                        "quant_acc": {}}
+                self._write_cell(cell_dir, workload, params, counts, meta)
+            except BaseException:
+                if budget is not None:   # failed publish spent nothing
+                    budget.refund()
+                raise
             self.misses += 1
             hit = False
 
@@ -328,11 +364,39 @@ class TraceCache:
         os.replace(tmp, os.path.join(cell_dir, _META))
 
     def _read_meta(self, cell_dir: str) -> Optional[dict]:
+        """Read the completion-marking meta sidecar.  Unreadable meta — a
+        truncated or torn write, real on network filesystems — is treated
+        as *missing* (the cell re-resolves as a miss and republishes) after
+        quarantining the bad bytes to ``meta.msgpack.corrupt``; without the
+        quarantine every future ``resolve``/``contains`` of the cell would
+        crash forever on the same torn file."""
         path = os.path.join(cell_dir, _META)
-        if not os.path.exists(path):
+        try:
+            with open(path, "rb") as f:
+                raw = f.read()
+        except FileNotFoundError:
             return None
-        with open(path, "rb") as f:
-            return msgpack.unpackb(f.read())
+        try:
+            meta = msgpack.unpackb(raw)
+            if not isinstance(meta, dict) or "accuracy" not in meta \
+                    or "quant_acc" not in meta:
+                raise ValueError(f"meta is not a complete cell record: "
+                                 f"{type(meta).__name__}")
+        except Exception as e:                           # noqa: BLE001
+            self._quarantine_meta(path, e)
+            return None
+        return meta
+
+    def _quarantine_meta(self, path: str, error: Exception) -> None:
+        if path not in _quarantined:                     # log once per path
+            _quarantined.add(path)
+            log.warning("unreadable cell meta %s (%s: %s); quarantined as "
+                        "%s.corrupt — the cell will retrain",
+                        path, type(error).__name__, error, _META)
+        try:
+            os.replace(path, path + ".corrupt")
+        except OSError:
+            pass                 # a concurrent resolver already moved it
 
     @property
     def stats(self) -> dict:

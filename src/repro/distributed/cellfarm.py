@@ -42,7 +42,7 @@ import dataclasses
 import logging
 import multiprocessing
 import os
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 from repro.core.workloads.cache import TraceCache, cell_key
 from repro.core.workloads.registry import Workload
@@ -165,13 +165,24 @@ def _farm_attempt(args: Sequence[tuple[CellJob, str]],
 
 
 def resolve_cells(jobs: Sequence[CellJob], root: str,
-                  workers: Optional[int] = None,
+                  workers: Union[int, str, None] = None,
                   stack: bool = False,
                   max_stack: Optional[int] = None,
                   retries: Optional[int] = None) -> list[CellOutcome]:
     """Resolve ``jobs`` into the cache at ``root``; returns one outcome per
     job, in job order.  ``workers`` bounds the process pool (default: one
     per job, capped at the CPU count and ``MAX_POOL_WORKERS``).
+
+    ``workers="cluster"`` farms across *hosts* instead of processes: jobs
+    spool to ``<root>/queue/`` and any ``fleet.FleetWorker`` enrolled on
+    the shared root claims them by lease (``repro.distributed.fleet``).
+    The call blocks on lease/publish progress and falls back to in-process
+    training for cells the fleet makes no progress on, so it completes
+    even with zero live workers.  Failed outcomes ship with
+    ``CellOutcome.error`` exactly like the process farm (the fleet path
+    has its own reclaim/retry machinery, so the local retry loop does not
+    re-enter it); ``stack`` does not apply — slab formation is each
+    worker's own affair.
 
     ``stack=True`` routes same-signature groups through the in-process
     vmapped stack trainer first (``cellstack.resolve_stacked``): with a
@@ -191,6 +202,12 @@ def resolve_cells(jobs: Sequence[CellJob], root: str,
     jobs = list(jobs)
     if not jobs:
         return []
+    if workers == "cluster":
+        from repro.distributed import fleet   # lazy: fleet imports us
+        return fleet.resolve_cluster(jobs, root)
+    if isinstance(workers, str):
+        raise ValueError(f"workers must be an int or 'cluster', "
+                         f"got {workers!r}")
     retries = MAX_RETRIES if retries is None else int(retries)
     outcomes: list[Optional[CellOutcome]] = [None] * len(jobs)
 

@@ -62,11 +62,16 @@ class TrainSupervisor:
                        keep_last=self.cfg.keep_last)
 
     def _restore(self) -> int:
+        # Join the in-flight async save BEFORE picking the step: reading
+        # latest_step first can select a checkpoint older than the one the
+        # pending writer publishes moments later — a stale restore that
+        # silently replays already-durable steps.
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
         step = store.latest_step(self.cfg.checkpoint_dir)
         if step is None:
             return 0
-        if self._pending is not None:
-            self._pending.join()
         self.state = store.restore(self.cfg.checkpoint_dir, self.state,
                                    step=step, shardings=self.shardings)
         log.warning("restored checkpoint at step %d", step)

@@ -9,7 +9,12 @@ it, built entirely from existing library contracts:
   one round per study per turn), so N tenants' studies interleave without
   thread-per-study state.  Pending cell training still fans out over the
   shared ``cellfarm`` process pool / ``cellstack`` vmapped stacks when the
-  service is constructed with ``workers``/``stack``.
+  service is constructed with ``workers``/``stack`` — and over *hosts*
+  with ``workers="cluster"``: a service whose ``TraceCache`` root sits on
+  an NFS-style mount spools every study's pending cells to the root's job
+  queue, where lease-holding ``fleet.FleetWorker`` processes on every
+  enrolled machine drain them (``repro.distributed.fleet``), saturating
+  the whole fleet from one scheduler.
 * **Dedup for free** — all tenants share one content-addressed
   ``TraceCache``: the first study to reach a model cell trains it, every
   later study (any tenant) resolves it as a hit.  Overlapping cells across
@@ -143,7 +148,7 @@ class DSEService:
                  tenant_quota: Optional[int] = None,
                  tenant_quotas: Optional[dict[str, int]] = None,
                  reject_over_quota: bool = False,
-                 workers: int = 0,
+                 workers: Union[int, str] = 0,
                  stack: bool = False,
                  checkpoint_every: Optional[int] = None,
                  progress_every: int = 1):

@@ -171,25 +171,49 @@ EVENT_KINDS = {cls.__name__: cls for cls in
                 Progress, StudyEvicted, StudyFailed, StudyCompleted)}
 
 
+#: wire kind for a spooled fleet training job (repro.distributed.fleet):
+#: not an event, but it rides the same ``to_wire``/``from_wire`` envelope so
+#: the job spool and a future network transport share one serializer
+_JOB_KIND = "CellJob"
+
+
 def is_terminal(event: Event) -> bool:
     return isinstance(event, TERMINAL_EVENTS)
 
 
-def to_wire(event: Event) -> dict:
-    """Event -> flat dict with an ``"event"`` kind discriminator (what a
-    network transport would serialize, e.g. ``json.dumps``)."""
-    return {"event": type(event).__name__, **dataclasses.asdict(event)}
+def to_wire(obj) -> dict:
+    """Event (or ``cellfarm.CellJob``) -> flat JSON-safe dict with an
+    ``"event"`` kind discriminator (what a network transport would
+    serialize, e.g. ``json.dumps``)."""
+    if isinstance(obj, Event):
+        return {"event": type(obj).__name__, **dataclasses.asdict(obj)}
+    from repro.distributed.cellfarm import CellJob   # lazy: pulls jax
+    if isinstance(obj, CellJob):
+        return {"event": _JOB_KIND,
+                "workload": _workload_to_wire(obj.workload),
+                "assignment": {k: (int(v) if k == "num_steps" else float(v))
+                               for k, v in obj.assignment.items()},
+                "seed": int(obj.seed),
+                "quant_bits": [int(b) for b in obj.quant_bits]}
+    raise TypeError(f"to_wire takes an Event or a CellJob, "
+                    f"got {type(obj).__name__}")
 
 
-def from_wire(wire: dict) -> Event:
+def from_wire(wire: dict) -> "Event":
     """Inverse of :func:`to_wire` (tuple fields re-tupled so the round
     trip survives a JSON hop, which turns tuples into lists)."""
     wire = dict(wire)
     kind = wire.pop("event")
+    if kind == _JOB_KIND:
+        from repro.distributed.cellfarm import CellJob
+        return CellJob(workload=_workload_from_wire(wire["workload"]),
+                       assignment=dict(wire["assignment"]),
+                       seed=int(wire["seed"]),
+                       quant_bits=tuple(int(b) for b in wire["quant_bits"]))
     cls = EVENT_KINDS.get(kind)
     if cls is None:
         raise ValueError(f"unknown event kind {kind!r}; "
-                         f"known: {sorted(EVENT_KINDS)}")
+                         f"known: {sorted(EVENT_KINDS) + [_JOB_KIND]}")
     fields = {f.name: f for f in dataclasses.fields(cls)}
     unknown = set(wire) - set(fields)
     if unknown:
@@ -198,3 +222,43 @@ def from_wire(wire: dict) -> Event:
         if fields[name].type.startswith("tuple") and isinstance(value, list):
             wire[name] = tuple(value)
     return cls(**wire)
+
+
+# ---- workload wire format ---------------------------------------------------
+# A Workload is all primitives except ``layers`` (snn.Dense/Conv/MaxPool
+# dataclasses), which serialize with a "kind" tag.  Exact round trip:
+# frozen-dataclass equality holds across the JSON hop.
+
+def _workload_to_wire(wl) -> dict:
+    from repro.core import snn
+    d = dataclasses.asdict(wl)
+    d["layers"] = [_layer_to_wire(spec, snn) for spec in wl.layers]
+    return d
+
+
+def _layer_to_wire(spec, snn) -> dict:
+    if isinstance(spec, snn.MaxPool):
+        return {"kind": "pool", "window": spec.window}
+    kind = "dense" if isinstance(spec, snn.Dense) else "conv"
+    d = {"kind": kind, **dataclasses.asdict(spec)}
+    return d
+
+
+def _workload_from_wire(d: dict):
+    from repro.core import snn
+    from repro.core.workloads.registry import Workload
+    d = dict(d)
+    d["layers"] = tuple(_layer_from_wire(ld, snn) for ld in d["layers"])
+    for name in ("input_shape", "num_steps_choices", "population_choices"):
+        d[name] = tuple(d[name])
+    return Workload(**d)
+
+
+def _layer_from_wire(ld: dict, snn):
+    ld = dict(ld)
+    kind = ld.pop("kind")
+    if kind == "pool":
+        return snn.MaxPool(**ld)
+    if "lif" in ld:
+        ld["lif"] = snn.LIFParams(**ld["lif"])
+    return {"dense": snn.Dense, "conv": snn.Conv}[kind](**ld)

@@ -223,6 +223,41 @@ class TestFaultTolerance:
         with pytest.raises(RuntimeError):
             sup.run(bad_step, num_steps=5)
 
+    def test_restore_joins_inflight_async_save_first(self, tmp_path,
+                                                     monkeypatch):
+        """Regression: ``_restore`` used to read ``latest_step`` BEFORE
+        joining the in-flight async save, so a crash racing a slow writer
+        restored the previous (stale) checkpoint and silently replayed
+        already-durable steps.  With a save that publishes step 4 only
+        after a delay, the restore must still pick 4, not 2."""
+        import threading
+        import time as _time
+
+        import jax.numpy as jnp
+        from repro.checkpoint import store
+        from repro.distributed.fault_tolerance import (SupervisorConfig,
+                                                       TrainSupervisor)
+
+        def slow_save_async(path, step, state, keep_last=3):
+            def _write():
+                _time.sleep(0.5)             # the slow network store
+                store.save(path, step, state, keep_last=keep_last)
+            t = threading.Thread(target=_write)
+            t.start()
+            return t
+
+        monkeypatch.setattr(store, "save_async", slow_save_async)
+        state = {"w": jnp.arange(3.0)}
+        sup = TrainSupervisor(
+            SupervisorConfig(checkpoint_dir=str(tmp_path),
+                             checkpoint_every=2, async_save=True), state)
+        store.save(str(tmp_path), 2, state)  # an older durable checkpoint
+        sup._save(4)                         # in flight for the next 0.5s
+        step = sup._restore()                # "node failure" mid-save
+        assert step == 4                     # joined the writer, not stale
+        assert sup._pending is None
+        assert store.latest_step(str(tmp_path)) == 4
+
 
 class TestGradientCompression:
     def test_quantize_roundtrip_error_bounded(self):

@@ -1,0 +1,361 @@
+"""Tests for the elastic multi-host cell fleet: the lease protocol
+(exclusive create, heartbeat renewal, stale break, ownership-checked
+renew/release), the wire-format job spool, the ``FleetWorker``
+claim/train/publish loop, fault injection (two claimants race one cell;
+a worker SIGKILL'd mid-train whose lease goes stale and is reclaimed),
+and end-to-end ``explore(workers="cluster")`` bit-identical equivalence
+with serial exploration across spawned worker processes."""
+import dataclasses
+import json
+import multiprocessing
+import os
+import signal
+import threading
+import time
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import dse, snn, workloads
+from repro.distributed import cellfarm, fleet
+from repro.serve import protocol
+
+
+def _tiny_wl(name="fleet-test-wl"):
+    return dataclasses.replace(
+        workloads.get("mnist-mlp"), name=name,
+        layers=(snn.Dense(12),), pcr=1,
+        n_train=128, n_test=64, train_steps=4, trace_samples=16)
+
+
+def _jobs(wl, steps=(2,), pops=(1.0,)):
+    return [cellfarm.CellJob(workload=wl,
+                             assignment={"num_steps": t, "population": p})
+            for t in steps for p in pops]
+
+
+def _rows(table):
+    """All columns flattened to sortable float rows (strings via crc32)."""
+    cols = []
+    for k in sorted(table.columns):
+        v = np.asarray(table.columns[k])
+        if v.dtype.kind in "USO":
+            v = np.array([float(zlib.crc32(str(x).encode())) for x in v])
+        cols.append(np.asarray(v, np.float64).reshape(len(table), -1))
+    a = np.concatenate(cols, axis=1)
+    return a[np.lexsort(a.T)]
+
+
+def _backdate(path, by=3600.0):
+    old = time.time() - by
+    os.utime(path, (old, old))
+
+
+class TestLease:
+    def test_exclusive_acquire_and_release(self, tmp_path):
+        root = str(tmp_path)
+        a = fleet.acquire(root, "cell", "w-a", ttl=30)
+        assert a is not None
+        # a live lease blocks every other claimant
+        assert fleet.acquire(root, "cell", "w-b", ttl=30) is None
+        a.release()
+        b = fleet.acquire(root, "cell", "w-b", ttl=30)
+        assert b is not None and b.worker_id == "w-b"
+
+    def test_renew_touches_heartbeat(self, tmp_path):
+        lease = fleet.acquire(str(tmp_path), "cell", "w-a", ttl=30)
+        _backdate(lease.path)
+        stale = os.stat(lease.path).st_mtime
+        assert lease.renew()
+        assert os.stat(lease.path).st_mtime > stale
+        assert not lease.lost
+
+    def test_stale_lease_broken_and_reclaimed(self, tmp_path):
+        root = str(tmp_path)
+        dead = fleet.acquire(root, "cell", "w-dead", ttl=30)
+        _backdate(dead.path)                 # heartbeat long past the TTL
+        live = fleet.acquire(root, "cell", "w-live", ttl=30)
+        assert live is not None and live.worker_id == "w-live"
+        # the demoted holder notices on its next renewal and must not
+        # touch (renew) or unlink (release) the new owner's lease
+        assert not dead.renew()
+        assert dead.lost
+        dead.release()
+        with open(live.path) as f:
+            assert f.read() == "w-live"
+        assert live.renew()
+
+    def test_fresh_lease_not_breakable(self, tmp_path):
+        root = str(tmp_path)
+        fleet.acquire(root, "cell", "w-a", ttl=30)
+        for _ in range(3):
+            assert fleet.acquire(root, "cell", "w-b", ttl=30) is None
+
+    def test_heartbeat_thread_keeps_lease_live(self, tmp_path):
+        root = str(tmp_path)
+        lease = fleet.acquire(root, "cell", "w-a", ttl=0.4)
+        hb = fleet._Heartbeat(lease, ttl=0.4)
+        hb.start()
+        try:
+            time.sleep(1.2)                  # 3x the TTL: would be stale
+            assert fleet.acquire(root, "cell", "w-b", ttl=0.4) is None
+        finally:
+            hb.stop()
+
+
+class TestWireFormat:
+    def test_cell_job_round_trips_exactly(self):
+        job = cellfarm.CellJob(
+            workload=_tiny_wl(), seed=3, quant_bits=(4, 8),
+            assignment={"num_steps": 2, "population": 0.5})
+        wire = protocol.to_wire(job)
+        assert wire["event"] == "CellJob"
+        back = protocol.from_wire(json.loads(json.dumps(wire)))
+        assert back == job                   # frozen dataclass equality
+
+    def test_conv_pool_workload_round_trips(self):
+        job = cellfarm.CellJob(workload=workloads.get("dvs-conv"),
+                               assignment={"num_steps": 4})
+        assert protocol.from_wire(
+            json.loads(json.dumps(protocol.to_wire(job)))) == job
+
+    def test_unknown_kind_lists_cell_job(self):
+        with pytest.raises(ValueError, match="CellJob"):
+            protocol.from_wire({"event": "NoSuchKind"})
+
+
+class TestSpool:
+    def test_spool_idempotent_and_clears_stale_error(self, tmp_path):
+        root = str(tmp_path)
+        jobs = _jobs(_tiny_wl(), steps=(2, 3))
+        keys = fleet.spool(root, jobs)
+        assert len(set(keys)) == 2
+        fleet._write_error(root, keys[0], "old failure")
+        assert fleet.spool(root, jobs) == keys      # re-spool: same keys
+        assert fleet._read_error(root, keys[0]) is None
+        for key in keys:
+            assert fleet._read_job(fleet._spool_path(root, key)) == \
+                jobs[keys.index(key)]
+
+    def test_unreadable_job_skipped(self, tmp_path):
+        root = str(tmp_path)
+        key = fleet.spool(root, _jobs(_tiny_wl()))[0]
+        path = fleet._spool_path(root, key)
+        with open(path, "w") as f:
+            f.write("{not json")
+        assert fleet._read_job(path) is None
+        assert fleet._read_job(path + ".gone") is None
+
+
+class TestFleetWorker:
+    def test_worker_claims_trains_publishes_drains(self, tmp_path):
+        root = str(tmp_path)
+        wl = _tiny_wl("fleet-worker-wl")
+        key = fleet.spool(root, _jobs(wl))[0]
+        worker = fleet.FleetWorker(root, worker_id="w-0", poll=0.01)
+        stats = worker.run(max_cells=1)
+        assert stats["cells_trained"] == 1 and stats["cells_failed"] == 0
+        assert worker.cache.contains_key(key)
+        assert not os.path.exists(fleet._spool_path(root, key))
+        assert not os.path.exists(fleet._lease_path(root, key))
+
+    def test_worker_drains_already_published(self, tmp_path):
+        root = str(tmp_path)
+        wl = _tiny_wl("fleet-drain-wl")
+        jobs = _jobs(wl)
+        cache = workloads.TraceCache(root=root)
+        cache.resolve(jobs[0].workload, jobs[0].assignment)
+        key = fleet.spool(root, jobs)[0]
+        worker = fleet.FleetWorker(root, worker_id="w-0", poll=0.01)
+        stats = worker.run(idle_timeout=0.2)
+        assert stats == {"cells_trained": 0, "cells_failed": 0,
+                         "cells_skipped": 0, "lease_takeovers": 0}
+        assert not os.path.exists(fleet._spool_path(root, key))
+
+    def test_worker_failure_writes_error_sidecar(self, tmp_path,
+                                                 monkeypatch):
+        root = str(tmp_path)
+        key = fleet.spool(root, _jobs(_tiny_wl("fleet-fail-wl")))[0]
+        worker = fleet.FleetWorker(root, worker_id="w-0", poll=0.01)
+
+        def boom(*a, **kw):
+            raise RuntimeError("injected training failure")
+
+        monkeypatch.setattr(worker.cache, "resolve", boom)
+        stats = worker.run(max_cells=1)
+        assert stats["cells_failed"] == 1 and stats["cells_trained"] == 0
+        assert "injected training failure" in fleet._read_error(root, key)
+        assert not os.path.exists(fleet._spool_path(root, key))
+        assert not os.path.exists(fleet._lease_path(root, key))
+
+    def test_worker_counts_takeover_of_stale_lease(self, tmp_path):
+        root = str(tmp_path)
+        wl = _tiny_wl("fleet-takeover-wl")
+        key = fleet.spool(root, _jobs(wl))[0]
+        dead = fleet.acquire(root, key, "w-dead", ttl=30)
+        _backdate(dead.path)                 # the dead worker's last beat
+        worker = fleet.FleetWorker(root, worker_id="w-1", poll=0.01)
+        stats = worker.run(max_cells=1)
+        assert stats["lease_takeovers"] == 1
+        assert stats["cells_trained"] == 1
+        assert worker.cache.contains_key(key)
+
+    def test_two_workers_race_one_cell_exactly_one_trains(self, tmp_path):
+        root = str(tmp_path)
+        wl = _tiny_wl("fleet-race-wl")
+        key = fleet.spool(root, _jobs(wl))[0]
+        workers = [fleet.FleetWorker(root, worker_id=f"w-{i}", poll=0.01)
+                   for i in range(2)]
+        threads = [threading.Thread(
+            target=w.run, kwargs=dict(max_cells=1, idle_timeout=2.0))
+            for w in workers]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+            assert not t.is_alive()
+        trained = sum(w.stats["cells_trained"] for w in workers)
+        failed = sum(w.stats["cells_failed"] for w in workers)
+        assert trained == 1 and failed == 0  # O_EXCL picked one claimant
+        assert workers[0].cache.contains_key(key)
+
+
+class TestResolveCluster:
+    def test_zero_workers_falls_back_in_process(self, tmp_path):
+        root = str(tmp_path)
+        jobs = _jobs(_tiny_wl("fleet-fallback-wl"), steps=(2, 3))
+        out = fleet.resolve_cluster(jobs, root, timeout=0.3, ttl=0.5,
+                                    poll=0.05)
+        assert [o.error for o in out] == [None, None]
+        assert all(o.trained for o in out)
+        cache = workloads.TraceCache(root=root)
+        assert all(cache.contains_key(o.key) for o in out)
+        # resolving again: every cell is a pure hit, nothing re-spooled
+        again = fleet.resolve_cluster(jobs, root, timeout=0.3, ttl=0.5)
+        assert not any(o.trained for o in again)
+        assert not any(os.path.exists(fleet._spool_path(root, o.key))
+                       for o in again)
+
+    def test_error_sidecar_ships_as_failed_outcome(self, tmp_path):
+        root = str(tmp_path)
+        jobs = _jobs(_tiny_wl("fleet-errship-wl"))
+        key = cellfarm._job_key(jobs[0])
+        # the sidecar must land mid-resolution: spooling (which
+        # resolve_cluster does first) clears stale errors by design
+        t = threading.Timer(0.3, fleet._write_error,
+                            args=(root, key, "ValueError: worker exploded"))
+        t.start()
+        out = fleet.resolve_cluster(jobs, root, timeout=5.0, ttl=5.0,
+                                    poll=0.05, fallback=False)
+        t.join()
+        assert out[0].error == "ValueError: worker exploded"
+        assert not out[0].trained
+        assert not os.path.exists(fleet._error_path(root, key))
+
+    def test_no_progress_without_fallback_errors(self, tmp_path):
+        root = str(tmp_path)
+        jobs = _jobs(_tiny_wl("fleet-noprog-wl"))
+        out = fleet.resolve_cluster(jobs, root, timeout=0.2, ttl=0.3,
+                                    poll=0.05, fallback=False)
+        assert "no progress" in out[0].error
+
+    def test_dead_workers_stale_lease_reclaimed(self, tmp_path):
+        """Every cell is leased by a worker that died without a trace
+        (stale heartbeats, nothing published): the submitter must break
+        the leases and complete the study with zero failed outcomes."""
+        root = str(tmp_path)
+        jobs = _jobs(_tiny_wl("fleet-deadlease-wl"), steps=(2, 3))
+        keys = fleet.spool(root, jobs)
+        for key in keys:
+            lease = fleet.acquire(root, key, "w-dead", ttl=30)
+            _backdate(lease.path)
+        out = fleet.resolve_cluster(jobs, root, timeout=0.5, ttl=1.0,
+                                    poll=0.05)
+        assert [o.error for o in out] == [None, None]
+        cache = workloads.TraceCache(root=root)
+        assert all(cache.contains_key(k) for k in keys)
+
+
+class TestFleetProcesses:
+    """Fault injection and equivalence with real spawned worker processes
+    (each pays a fresh interpreter + JAX import, so these are the slowest
+    tests in the suite)."""
+
+    def _spawn(self, root, worker_id, **kw):
+        ctx = multiprocessing.get_context("spawn")   # JAX is not fork-safe
+        p = ctx.Process(target=fleet.run_worker,
+                        kwargs=dict(root=root, worker_id=worker_id, **kw))
+        p.start()
+        return p
+
+    def test_worker_sigkilled_mid_train_study_completes(self, tmp_path,
+                                                        monkeypatch):
+        """ISSUE acceptance: kill -9 on a worker mid-study -> its lease
+        goes stale, the cell is reclaimed, and the study completes with
+        every cell resolved and zero failed outcomes."""
+        root = str(tmp_path)
+        wl = _tiny_wl("fleet-kill-wl")
+        jobs = _jobs(wl, steps=(2, 3))
+        keys = fleet.spool(root, jobs)
+        proc = self._spawn(root, "w-victim", idle_timeout=300)
+        try:
+            deadline = time.time() + 240
+            while time.time() < deadline:    # wait for the first claim
+                if any(os.path.exists(fleet._lease_path(root, k))
+                       for k in keys):
+                    break
+                time.sleep(0.05)
+            else:
+                pytest.fail("worker never claimed a cell")
+            os.kill(proc.pid, signal.SIGKILL)
+        finally:
+            proc.join(timeout=30)
+        # short TTL so the orphaned lease ages out fast
+        monkeypatch.setenv("REPRO_FLEET_LEASE_TTL", "1.0")
+        monkeypatch.setenv("REPRO_FLEET_TIMEOUT", "2.0")
+        cache = workloads.TraceCache(root=root)
+        study = dse.explore(workload=wl, num_steps=(2, 3),
+                            population=(1.0,), max_lhr=4, weight_bits=(4,),
+                            chunk_size=4096, cache=cache, workers="cluster")
+        assert study.summary["cells_resolved"] == 2
+        assert all(cache.contains_key(k) for k in keys)
+        assert len(study.frontier) > 0
+
+    def test_cluster_explore_bit_identical_to_serial(self, tmp_path):
+        """ISSUE acceptance: ``explore(workers="cluster")`` with two live
+        FleetWorker processes produces a frontier bit-identical to the
+        serial run, and no cell is trained twice across the fleet."""
+        wl = _tiny_wl("fleet-e2e-wl")
+        kw = dict(workload=wl, num_steps=(2, 3), population=(0.5, 1.0),
+                  max_lhr=4, weight_bits=(4, 8), chunk_size=4096)
+        serial_root = os.path.join(str(tmp_path), "serial")
+        serial = dse.explore(cache=workloads.TraceCache(root=serial_root),
+                             **kw)
+        fa = _rows(serial.frontier)
+
+        root = os.path.join(str(tmp_path), "cluster")
+        os.makedirs(root)
+        stats_paths = [os.path.join(root, f"stats-{i}.json")
+                       for i in range(2)]
+        procs = [self._spawn(root, f"w-{i}", idle_timeout=15, stats_path=p)
+                 for i, p in enumerate(stats_paths)]
+        try:
+            cache = workloads.TraceCache(root=root)
+            study = dse.explore(cache=cache, workers="cluster", **kw)
+        finally:
+            for p in procs:
+                p.join(timeout=240)
+                assert not p.is_alive()
+        fb = _rows(study.frontier)
+        np.testing.assert_array_equal(fa, fb)       # bit-identical frontier
+
+        stats = [json.load(open(p)) for p in stats_paths]
+        trained = sum(s["cells_trained"] for s in stats)
+        duplicated = sum(s["cells_skipped"] for s in stats)
+        # the parent only ever loads published cells; the fleet trained
+        # each of the 4 cells exactly once between the two workers
+        assert cache.misses == 0
+        assert trained == 4 and duplicated == 0
+        assert sum(s["cells_failed"] for s in stats) == 0
+        assert study.farmed_misses == 4             # budget unit: publishes

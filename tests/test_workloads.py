@@ -2,6 +2,7 @@
 cache: population scaling, cache key sensitivity, train-or-load roundtrip,
 hit/miss accounting, and the lazily extended quantized-accuracy table."""
 import dataclasses
+import os
 
 import numpy as np
 import pytest
@@ -175,3 +176,87 @@ class TestTraceCache:
         assert a.accuracy_at(8) == a.quant_acc[8]
         assert a.accuracy_at(None) == a.accuracy
         assert a.accuracy_at(16) == a.accuracy      # unmeasured bits: float
+
+
+class TestCacheFaults:
+    """Corrupt-meta quarantine and budget charge/refund discipline — the
+    failure paths the fleet leans on (a torn ``meta.msgpack`` on a network
+    store must read as *missing*, and a failed training run must hand its
+    pre-charged budget unit back)."""
+
+    def _corrupt(self, cache, key, payload):
+        path = os.path.join(cache.root, key, "meta.msgpack")
+        with open(path, "wb") as f:
+            f.write(payload)
+        return path
+
+    def test_torn_meta_quarantined_and_retrained(self, tmp_path):
+        wl = _tiny()
+        cache = workloads.TraceCache(root=str(tmp_path))
+        a = cache.resolve(wl, {"num_steps": 2, "population": 1.0})
+        path = self._corrupt(cache, a.key, b"\xc1 torn write \xff")
+        fresh = workloads.TraceCache(root=str(tmp_path))
+        assert not fresh.contains_key(a.key)        # unreadable == missing
+        b = fresh.resolve(wl, {"num_steps": 2, "population": 1.0})
+        assert not b.cache_hit                      # retrained, not crashed
+        assert fresh.stats == {"hits": 0, "misses": 1}
+        assert os.path.exists(path + ".corrupt")    # bad bytes kept aside
+        assert b.accuracy == a.accuracy             # deterministic retrain
+        c = fresh.resolve(wl, {"num_steps": 2, "population": 1.0})
+        assert c.cache_hit                          # republish healed it
+
+    def test_meta_missing_required_fields_is_missing(self, tmp_path):
+        import msgpack
+        wl = _tiny()
+        cache = workloads.TraceCache(root=str(tmp_path))
+        a = cache.resolve(wl, {"num_steps": 2, "population": 1.0})
+        # valid msgpack, wrong shape: a dict without accuracy/quant_acc
+        self._corrupt(cache, a.key, msgpack.packb({"workload": wl.name}))
+        fresh = workloads.TraceCache(root=str(tmp_path))
+        assert not fresh.contains_key(a.key)
+
+    def test_budget_refunded_when_training_fails(self, tmp_path,
+                                                 monkeypatch):
+        wl = _tiny()
+        cache = workloads.TraceCache(root=str(tmp_path))
+        budget = workloads.TrainingBudget(1)
+
+        def boom(*a, **kw):
+            raise RuntimeError("injected training failure")
+
+        monkeypatch.setattr(cache, "_train", boom)
+        with pytest.raises(RuntimeError, match="injected"):
+            cache.resolve(wl, {"num_steps": 2, "population": 1.0},
+                          budget=budget)
+        assert budget.spent == 0                    # charge handed back
+        monkeypatch.undo()
+        # the un-leaked unit still buys the real training run
+        a = cache.resolve(wl, {"num_steps": 2, "population": 1.0},
+                          budget=budget)
+        assert not a.cache_hit and budget.spent == 1
+
+    def test_budget_refunded_when_publish_fails(self, tmp_path,
+                                                monkeypatch):
+        wl = _tiny()
+        cache = workloads.TraceCache(root=str(tmp_path))
+        trained = cache.resolve(wl, {"num_steps": 2, "population": 1.0})
+        budget = workloads.TrainingBudget(1)
+        other = workloads.TraceCache(root=str(tmp_path / "other"))
+
+        def boom(*a, **kw):
+            raise OSError("injected publish failure")
+
+        monkeypatch.setattr(other, "_write_cell", boom)
+        with pytest.raises(OSError, match="injected"):
+            other.publish(wl, {"num_steps": 2, "population": 1.0},
+                          params=trained.params, counts=trained.counts,
+                          accuracy=trained.accuracy, budget=budget)
+        assert budget.spent == 0
+
+    def test_refund_clamped_at_zero(self):
+        budget = workloads.TrainingBudget(5)
+        budget.refund(3)                            # nothing charged yet
+        assert budget.spent == 0 and budget.remaining == 5
+        budget.charge(2)
+        budget.refund(10)                           # over-refund: clamp
+        assert budget.spent == 0 and budget.remaining == 5
